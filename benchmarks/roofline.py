@@ -1,0 +1,100 @@
+"""Roofline analysis (deliverable g) — three terms per (arch x shape x mesh)
+from the compiled dry-run artifacts in experiments/dryrun/.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs         (197 TF/s bf16, v5e)
+  memory     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+  collective = collective_bytes_per_device / link_bw     (~50 GB/s ICI)
+
+All three in seconds; the max is the bound, its share is the bottleneck.
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) — per device — and the
+ratio MODEL_FLOPS / HLO_FLOPs shows how much compiled compute is useful
+(remat/dispatch waste shows up here).
+
+Caveat (documented in EXPERIMENTS.md): HLO comes from the CPU-backend SPMD
+compile; TPU fusion would reduce hbm_bytes, so the memory term is an upper
+bound. hbm_write_bytes (results only) is reported as the lower bound.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+from repro.models import lm as lm_mod
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+_param_cache: Dict[str, Dict[str, float]] = {}
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    if arch not in _param_cache:
+        cfg = get_config(arch)
+        _param_cache[arch] = {
+            "total": lm_mod.param_count(cfg),
+            "active": cfg.active_param_count(),
+        }
+    cfg = get_config(arch)
+    n = _param_cache[arch]["active" if cfg.moe else "total"]
+    shape = SHAPES[shape_name]
+    if shape.mode == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 6.0
+    elif shape.mode == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2.0
+    return mult * n * tokens / devices
+
+
+def analyze_record(rec: dict) -> Optional[dict]:
+    if not rec.get("ok"):
+        return None
+    flops_t = rec["flops"] / PEAK_FLOPS
+    mem_t = rec["hbm_bytes"] / HBM_BW
+    mem_lo_t = rec.get("hbm_write_bytes", 0.0) / HBM_BW
+    coll_t = rec["collectives"].get("total", 0.0) / LINK_BW
+    terms = {"compute": flops_t, "memory": mem_t, "collective": coll_t}
+    dominant = max(terms, key=terms.get)
+    bound = terms[dominant]
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["devices"])
+    useful = mf / rec["flops"] if rec["flops"] else 0.0
+    # roofline fraction: useful-compute time over the dominant bound
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "devices": rec["devices"],
+        "compute_s": round(flops_t, 6),
+        "memory_s": round(mem_t, 6),
+        "memory_lo_s": round(mem_lo_t, 6),
+        "collective_s": round(coll_t, 6),
+        "dominant": dominant,
+        "model_flops_ratio": round(useful, 4),
+        "roofline_fraction": round(frac, 4),
+        "hbm_gib": round(rec["memory"]["argument_size_in_bytes"] / 2 ** 30
+                         + rec["memory"]["temp_size_in_bytes"] / 2 ** 30, 2),
+    }
+
+
+def run():
+    rows: List[dict] = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag"):
+            continue                    # perf-iteration variants: §Perf only
+        r = analyze_record(rec)
+        if r:
+            rows.append(r)
+    n_ok = len(rows)
+    worst = min(rows, key=lambda r: r["roofline_fraction"]) if rows else None
+    derived = (f"cells={n_ok}"
+               + (f" worst={worst['arch']}/{worst['shape']}"
+                  f"@{worst['roofline_fraction']}" if worst else ""))
+    return [{"name": "roofline", "us_per_call": 0.0, "derived": derived}], rows

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+``python -m benchmarks.run [names...]`` runs each module, prints the
+``name,us_per_call,derived`` CSV summary line per benchmark, and writes the
+detailed rows to experiments/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+import traceback
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+ALL = [
+    "table5_nb",
+    "table6_benchmarks",
+    "table7_applications",
+    "fig89_cycle_accuracy",
+    "fig10_scalability",
+    "fig11_gathering",
+    "roofline",
+]
+
+
+def main() -> None:
+    names = sys.argv[1:] or ALL
+    OUT.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            summary, rows = mod.run()
+            (OUT / f"{name}.json").write_text(json.dumps(rows, indent=1,
+                                                         default=str))
+            for s in summary:
+                print(f"{s['name']},{s['us_per_call']},{s['derived']}")
+        except Exception as e:  # keep the harness going; report at the end
+            failed.append(name)
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Table 5 — Naive Bayes characterization of benchmark/application workloads.
+
+The paper runs SPEC / LAME / OpenModeller under four VM configs (C1-C4) and
+reports the primary/secondary NB classes. We reproduce the setup with the
+fleet simulator's phase-calibrated workload generators: each "benchmark" is
+a characteristic phase mixture, each "VM config" scales the compute
+availability (1 vs 2 VCPUs halves per-phase CPU utilization, exactly the
+effect the paper observes flipping CPU-primary to IO-primary), and the NB
+classifier — trained once on labeled phases, as in the paper — labels each
+15-sample window. Derived metric: classification accuracy against the true
+phase labels.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import characterize
+from repro.core.fleetsim import WorkloadTrace, make_training_nb
+
+# benchmark analogues: phase mixtures per §6.2's observed behavior
+BENCHMARKS = {
+    "SPEC": [("CPU", 30), ("MEM", 4), ("IO", 2)],
+    "LAME": [("CPU", 24), ("IO", 10)],
+    "OpenModeller": [("IO", 3), ("CPU", 40), ("IO", 4)],
+}
+CONFIGS = {"C1": (1, 1.0), "C2": (1, 2.0), "C3": (2, 1.0), "C4": (2, 2.0)}
+
+
+def _sample(trace: WorkloadTrace, vcpus: int, rng) -> tuple:
+    feats, labels = [], []
+    for t in np.arange(0, trace.cycle_s * 10, 1.0):
+        s = trace.sample_indexes(t, rng)
+        if vcpus == 2:           # second VCPU halves apparent CPU pressure
+            s["compute_util"] *= 0.52
+            s["step_time"] *= 0.55
+        feats.append([s[f] for f in ("step_time", "dirty_bytes",
+                                     "dirty_fraction", "collective_bytes",
+                                     "compute_util", "hbm_util")])
+        labels.append(trace.label_at(t))
+    return np.asarray(feats, np.float32), np.asarray(labels)
+
+
+def run() -> List[Dict]:
+    nb = make_training_nb()
+    rng = np.random.default_rng(7)
+    rows = []
+    t0 = time.perf_counter()
+    n_pred = 0
+    for bench, phases in BENCHMARKS.items():
+        trace = WorkloadTrace(phases, total_s=3600)
+        for cname, (vcpus, memgb) in CONFIGS.items():
+            feats, labels = _sample(trace, vcpus, rng)
+            cls, lm, post = characterize.classify_series(nb, feats)
+            n_pred += len(cls)
+            prim, sec = characterize.primary_secondary(cls)
+            acc = float(np.mean(cls == labels)) if vcpus == 1 else None
+            rows.append({
+                "benchmark": bench, "config": cname,
+                "primary": characterize.CLASSES[prim],
+                "secondary": characterize.CLASSES[sec] if sec is not None
+                else "-",
+                "accuracy_vs_truth": round(acc, 3) if acc is not None else "",
+                "lm_fraction": round(float(np.mean(lm)), 3),
+            })
+    dt = time.perf_counter() - t0
+    us_per_call = dt / max(n_pred, 1) * 1e6
+    return [{"name": "table5_nb", "us_per_call": round(us_per_call, 2),
+             "derived": f"rows={len(rows)}"}], rows

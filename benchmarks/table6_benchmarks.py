@@ -1,0 +1,89 @@
+"""Table 6 — orchestration with the artificial cycles (benchmarks testbed).
+
+Four jobs run the paper's Table 3 phase cycles; a consolidation event
+submits one migration per job at a random in-cycle moment. Traditional
+consolidation ("immediate") fires right away; ALMA postpones per cycle
+analysis. Reported per job: live-migration time, downtime, plus total data
+traffic — and the paper's headline reductions.
+
+Paper targets: migration time down up to ~74%; traffic down ~21% (bench);
+downtime statistically unchanged.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.fleetsim import FleetSim, SimJob, table3_traces
+from repro.core.orchestrator import MigrationRequest
+
+# Table 1 VM memory sizes (bytes)
+VMEM = {"vm03_A": 768e6, "vm02_C": 2048e6, "vm02_A": 768e6, "vm01_C": 1024e6}
+
+
+def _run_policy(policy: str, seed: int) -> Dict:
+    traces = table3_traces(phase_s=60.0)
+    jobs = [SimJob(j, traces[j], VMEM[j]) for j in traces]
+    sim = FleetSim(jobs, policy=policy, warmup_s=1200.0,
+                   max_wait=600.0, max_concurrent=2, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    # consolidation moments spread across a full cycle (the paper chose
+    # random points "to stress the consolidation policies")
+    plan = [MigrationRequest(job_id=j.job_id, created_at=sim.now
+                             + float(rng.uniform(0, j.trace.cycle_s)),
+                             v_bytes=j.v_bytes) for j in jobs]
+    res = sim.run_with_plan(plan, horizon_s=4000.0)
+    return {
+        "per_job_time": {j: o.total_time for j, o in res.per_job.items()},
+        "per_job_down": {j: o.downtime for j, o in res.per_job.items()},
+        "traffic": res.total_bytes,
+        "lm_hit_rate": res.lm_hit_rate,
+    }
+
+
+def run(n_seeds: int = 5):
+    t0 = time.perf_counter()
+    rows: List[Dict] = []
+    agg = {"trad_time": [], "alma_time": [], "trad_traffic": [],
+           "alma_traffic": [], "hit": []}
+    for seed in range(n_seeds):
+        trad = _run_policy("immediate", seed)
+        alma = _run_policy("alma-paper", seed)
+        agg["trad_traffic"].append(trad["traffic"])
+        agg["alma_traffic"].append(alma["traffic"])
+        agg["hit"].append(alma["lm_hit_rate"])
+        for j in trad["per_job_time"]:
+            agg["trad_time"].append(trad["per_job_time"][j])
+            agg["alma_time"].append(alma["per_job_time"][j])
+            if seed == 0:
+                red = (1 - alma["per_job_time"][j]
+                       / max(trad["per_job_time"][j], 1e-9)) * 100
+                rows.append({
+                    "vm": j,
+                    "trad_time_s": round(trad["per_job_time"][j], 2),
+                    "alma_time_s": round(alma["per_job_time"][j], 2),
+                    "time_reduction_pct": round(red, 1),
+                    "trad_down_s": round(trad["per_job_down"][j], 2),
+                    "alma_down_s": round(alma["per_job_down"][j], 2),
+                })
+    traffic_red = (1 - np.mean(agg["alma_traffic"])
+                   / np.mean(agg["trad_traffic"])) * 100
+    traffic_red_best = (1 - np.asarray(agg["alma_traffic"])
+                        / np.asarray(agg["trad_traffic"])).max() * 100
+    time_red_max = (1 - np.asarray(agg["alma_time"])
+                    / np.maximum(np.asarray(agg["trad_time"]), 1e-9)).max() * 100
+    rows.append({"vm": "TOTAL",
+                 "trad_traffic_MB": round(np.mean(agg["trad_traffic"]) / 1e6, 1),
+                 "alma_traffic_MB": round(np.mean(agg["alma_traffic"]) / 1e6, 1),
+                 "traffic_reduction_pct": round(traffic_red, 1),
+                 "traffic_reduction_best_seed_pct": round(traffic_red_best, 1),
+                 "max_time_reduction_pct": round(time_red_max, 1),
+                 "lm_hit_rate": round(float(np.mean(agg["hit"])), 3)})
+    dt = time.perf_counter() - t0
+    return [{"name": "table6_benchmarks",
+             "us_per_call": round(dt / n_seeds * 1e6, 1),
+             "derived": (f"max_time_red={time_red_max:.0f}%"
+                         f" traffic_red={traffic_red:.0f}%"
+                         f" (best seed {traffic_red_best:.0f}%)")}], rows

@@ -1,0 +1,43 @@
+"""Dev script: run a reduced-config forward+train+prefill+decode for every
+assigned architecture on CPU. Fast feedback loop while building."""
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import make_batch
+from repro.models import lm
+from repro.train import init_train_state, make_train_step, make_prefill_step, make_decode_step
+
+ONLY = sys.argv[1:] or ARCH_IDS
+
+for arch in ONLY:
+    t0 = time.time()
+    try:
+        cfg = get_config(arch).smoke()
+        rng = jax.random.key(0)
+        state = init_train_state(cfg, rng)
+        n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+        batch = make_batch(cfg, 2, 64)
+        step = jax.jit(make_train_step(cfg, telemetry=True))
+        state, metrics = step(state, batch)
+        loss = float(metrics["loss"])
+        assert jnp.isfinite(metrics["loss"]), f"{arch}: loss NaN"
+        # prefill + 2 decode steps
+        pf = jax.jit(make_prefill_step(cfg, cache_len=96))
+        logits, cache = pf(state["params"], batch)
+        assert jnp.all(jnp.isfinite(logits)), f"{arch}: prefill NaN"
+        dec = jax.jit(make_decode_step(cfg))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(2):
+            tok, lg, cache = dec(state["params"], tok, cache)
+        assert jnp.all(jnp.isfinite(lg)), f"{arch}: decode NaN"
+        print(f"OK   {arch:22s} params={n_params:>9,} loss={loss:8.4f} "
+              f"dirty={float(metrics['dirty_fraction']):.2f} "
+              f"({time.time()-t0:.1f}s)")
+    except Exception as e:
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc()

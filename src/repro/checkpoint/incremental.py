@@ -1,0 +1,117 @@
+"""Incremental (dirty-block) checkpoints — the pre-copy engine applied to
+fault tolerance.
+
+Between full checkpoints, only state blocks that changed since the last
+(full or incremental) snapshot are written — exactly the paper's dirty-page
+tracking, reused: for MoE/embedding-heavy models most optimizer blocks are
+untouched between adjacent steps, so deltas are small. Restore replays the
+base full checkpoint plus deltas in order. This gives checkpoint-frequency
+at delta cost, which is what makes tight-RPO fault tolerance affordable at
+1000+ nodes.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import zstandard
+
+from repro.checkpoint.store import (restore_checkpoint, save_checkpoint,
+                                    _flatten_with_paths)
+from repro.core.precopy import _leaf_dirty
+
+
+class IncrementalCheckpointer:
+    def __init__(self, directory: str, block_elems: int = 1 << 14,
+                 full_every: int = 10):
+        self.directory = pathlib.Path(directory)
+        self.block = block_elems
+        self.full_every = full_every
+        self._shadow = None            # host copy of last snapshot
+        self._since_full = 0
+
+    def save(self, step: int, state) -> dict:
+        """Full or delta save; returns stats {kind, bytes}."""
+        host = jax.tree.map(np.asarray, state)
+        if self._shadow is None or self._since_full >= self.full_every:
+            save_checkpoint(str(self.directory), step, host)
+            self._shadow = host
+            self._since_full = 0
+            n = sum(a.nbytes for a in jax.tree.leaves(host))
+            return {"kind": "full", "bytes": n}
+
+        d = self.directory / f"delta_{step:08d}"
+        d.mkdir(parents=True, exist_ok=True)
+        cctx = zstandard.ZstdCompressor(level=3)
+        manifest = {}
+        total = 0
+        flat_new = _flatten_with_paths(host)
+        flat_old = _flatten_with_paths(self._shadow)
+        for i, (key, new) in enumerate(flat_new.items()):
+            old = flat_old[key]
+            nv = new.reshape(-1)
+            ov = old.reshape(-1).astype(nv.dtype)
+            nb = -(-nv.size // self.block)
+            if np.issubdtype(nv.dtype, np.floating):
+                dirty = np.asarray(_leaf_dirty(jnp.asarray(nv),
+                                               jnp.asarray(ov), self.block))
+            else:
+                pad = nb * self.block - nv.size
+                dirty = np.any(np.pad(nv, (0, pad)).reshape(nb, self.block)
+                               != np.pad(ov, (0, pad)).reshape(nb, self.block),
+                               axis=1)
+            idx = np.flatnonzero(dirty)
+            if idx.size == 0:
+                continue
+            pad = nb * self.block - nv.size
+            blocks = np.pad(nv, (0, pad)).reshape(nb, self.block)[idx]
+            fname = f"delta_{i:05d}.bin.zst"
+            with open(d / fname, "wb") as f:
+                f.write(cctx.compress(blocks.tobytes()))
+            manifest[key] = {"file": fname, "blocks": idx.tolist(),
+                             "dtype": str(nv.dtype)}
+            total += blocks.nbytes
+        (d / "manifest.json").write_text(json.dumps(
+            {"step": step, "block": self.block, "leaves": manifest}))
+        self._shadow = host
+        self._since_full += 1
+        return {"kind": "delta", "bytes": total}
+
+    # -- restore -------------------------------------------------------------
+    def restore(self, step: int, like, shardings=None) -> Any:
+        """Restore state at ``step``: base full checkpoint + ordered deltas."""
+        fulls = sorted(int(p.name.split("_")[1])
+                       for p in self.directory.glob("step_*") if p.is_dir())
+        base = max(s for s in fulls if s <= step)
+        state = restore_checkpoint(str(self.directory), base, like)
+        deltas = sorted(int(p.name.split("_")[1])
+                        for p in self.directory.glob("delta_*") if p.is_dir())
+        flat = _flatten_with_paths(jax.tree.map(np.array, state))
+        dctx = zstandard.ZstdDecompressor()
+        for s in deltas:
+            if not (base < s <= step):
+                continue
+            d = self.directory / f"delta_{s:08d}"
+            man = json.loads((d / "manifest.json").read_text())
+            blk = man["block"]
+            for key, meta in man["leaves"].items():
+                raw = dctx.decompress((d / meta["file"]).read_bytes())
+                blocks = np.frombuffer(raw, np.dtype(meta["dtype"])
+                                       ).reshape(len(meta["blocks"]), blk)
+                leaf = flat[key]
+                nv = leaf.reshape(-1)
+                nb = -(-nv.size // blk)
+                padded = np.pad(nv, (0, nb * blk - nv.size)).reshape(nb, blk)
+                padded[np.asarray(meta["blocks"])] = blocks
+                flat[key] = padded.reshape(-1)[: nv.size].reshape(leaf.shape)
+        leaves_like, treedef = jax.tree_util.tree_flatten(like)
+        keys = list(_flatten_with_paths(like).keys())
+        out = [flat[k] for k in keys]
+        if shardings is not None:
+            sh = jax.tree_util.tree_leaves(shardings)
+            out = [jax.device_put(a, s) for a, s in zip(out, sh)]
+        return jax.tree_util.tree_unflatten(treedef, out)

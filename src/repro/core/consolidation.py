@@ -1,0 +1,80 @@
+"""Server-consolidation planner (paper §3.3) — the upstream policy whose
+migration plans ALMA intercepts.
+
+First-fit-decreasing heuristic (the paper notes heuristics dominate in
+practice for scalability): given per-job loads and host capacities, pack jobs
+onto the fewest hosts; every job that must move becomes a MigrationRequest.
+ALMA does not modify this policy — it only re-times its requests (Fig. 2/5c).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.orchestrator import MigrationRequest
+
+
+@dataclass
+class Host:
+    host_id: str
+    capacity: float                    # abstract load units (e.g. chips)
+    jobs: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def load(self) -> float:
+        return sum(self.jobs.values())
+
+    @property
+    def free(self) -> float:
+        return self.capacity - self.load
+
+
+@dataclass
+class Placement:
+    hosts: Dict[str, Host]
+
+    def host_of(self, job_id: str) -> Optional[str]:
+        for h in self.hosts.values():
+            if job_id in h.jobs:
+                return h.host_id
+        return None
+
+
+def consolidate_ffd(placement: Placement, *, now: float = 0.0,
+                    state_bytes: Optional[Dict[str, float]] = None
+                    ) -> Tuple[Placement, List[MigrationRequest]]:
+    """First-fit-decreasing repack. Returns (new placement, migration plan).
+
+    Target hosts are the most-loaded first (consolidate into few), jobs are
+    placed largest-first; a job that lands on a different host than it
+    occupies now yields a MigrationRequest.
+    """
+    jobs: List[Tuple[str, float, str]] = []
+    for h in placement.hosts.values():
+        for j, load in h.jobs.items():
+            jobs.append((j, load, h.host_id))
+    jobs.sort(key=lambda t: -t[1])
+
+    order = sorted(placement.hosts.values(), key=lambda h: -h.load)
+    new_hosts = {h.host_id: Host(h.host_id, h.capacity) for h in order}
+    plan: List[MigrationRequest] = []
+    state_bytes = state_bytes or {}
+
+    for job_id, load, src in jobs:
+        for h in new_hosts.values():
+            if h.free >= load:
+                h.jobs[job_id] = load
+                if h.host_id != src:
+                    plan.append(MigrationRequest(
+                        job_id=job_id, created_at=now,
+                        v_bytes=state_bytes.get(job_id, 0.0),
+                        src=src, dst=h.host_id))
+                break
+        else:  # no capacity anywhere: keep in place
+            new_hosts[src].jobs[job_id] = load
+
+    return Placement(new_hosts), plan
+
+
+def hosts_used(placement: Placement) -> int:
+    return sum(1 for h in placement.hosts.values() if h.jobs)

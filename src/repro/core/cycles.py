@@ -1,0 +1,187 @@
+"""FFT cycle recognition and cycle decomposition (paper §4.2, Algorithm 1).
+
+Input is the chronologically ordered LM/NLM classification series from the
+characterizer. ``cycle_length`` extracts the dominant period via the power
+spectrum (O(n log n), exactly the paper's tool); ``decompose`` is Algorithm 1:
+one cycle window is split into the suitable (ArrayLM) and unsuitable
+(ArrayNLM) moment sets. Simple and complex (multi-interval) cycles both fall
+out of the same machinery.
+
+Beyond the paper ('alma-plus'): ``fold_profile`` replaces the first-window
+slice with a phase-folded majority vote over *all* observed cycles (more
+robust to classifier noise), and a confidence score (peak power / total
+power) gates orchestration decisions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclass
+class CycleModel:
+    period: int                    # samples per cycle (0 = acyclic)
+    confidence: float              # spectral peak share in (0, 1]
+    profile_lm: np.ndarray         # (period,) int8: 1 = LM at this phase
+    array_lm: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    array_nlm: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+
+    @property
+    def cyclic(self) -> bool:
+        return self.period > 1 and 0 < self.profile_lm.sum() < self.period
+
+
+def power_spectrum(series: np.ndarray, use_kernel: bool = True) -> np.ndarray:
+    """|FFT|^2 of the mean-removed series. Uses the Pallas MXU matmul-DFT
+    kernel (interpret mode on CPU) for the sizes it tiles well; falls back to
+    numpy's pocketfft otherwise."""
+    x = np.asarray(series, np.float32)
+    x = x - x.mean()
+    if use_kernel and kops.dft_supported(x.shape[-1]):
+        return np.asarray(kops.power_spectrum(x[None]))[0]
+    f = np.fft.rfft(x)
+    return (f.real ** 2 + f.imag ** 2).astype(np.float32)
+
+
+def cycle_length(series: np.ndarray, *, min_period: int = 2,
+                 max_period: Optional[int] = None,
+                 use_kernel: bool = True) -> Tuple[int, float]:
+    """Dominant cycle length of a series. Returns (period, confidence).
+
+    period = round(N / k*) with k* the argmax power bin whose implied period
+    lies in [min_period, max_period]; confidence is that bin's share of total
+    (DC-removed) spectral mass.
+    """
+    n = len(series)
+    if n < 2 * min_period:
+        return 0, 0.0
+    max_period = min(max_period or n // 2, n // 2)
+    p = power_spectrum(series, use_kernel=use_kernel)
+    p = p[: n // 2 + 1].copy()
+    p[0] = 0.0                                     # drop DC
+    ks = np.arange(len(p))
+    with np.errstate(divide="ignore"):
+        periods = np.where(ks > 0, n / np.maximum(ks, 1), np.inf)
+    valid = (periods >= min_period) & (periods <= max_period)
+    if not valid.any() or p[valid].max() <= 0:
+        return 0, 0.0
+    k_star = int(np.argmax(np.where(valid, p, -1.0)))
+    conf = float(p[k_star] / max(p.sum(), 1e-12))
+    p0 = int(round(n / k_star))
+    return _refine_period(np.asarray(series, np.float64), p0,
+                          min_period, max_period), conf
+
+
+def _refine_period(x: np.ndarray, p0: int, min_period: int,
+                   max_period: int) -> int:
+    """Sharpen the FFT bin estimate with a local autocorrelation search.
+
+    FFT periods are quantized to n/k (a 512-sample window puts a true
+    120-sample cycle into the 128 bin — enough drift to break Algorithm 2's
+    modular indexing four cycles out). The spectral peak still *finds* the
+    cycle (the paper's tool); the lag search just de-quantizes it within
+    +/- one bin width.
+    """
+    n = len(x)
+    x = x - x.mean()
+    denom = float(x @ x) or 1.0
+    span = max(2, int(np.ceil(p0 * p0 / n)) + 1)
+    lo = max(min_period, p0 - span)
+    hi = min(max_period, n - 1, p0 + span)
+    best_p, best_r = p0, -np.inf
+    for p in range(lo, hi + 1):
+        r = float(x[:-p] @ x[p:]) / denom
+        if r > best_r:
+            best_p, best_r = p, r
+    return best_p
+
+
+def decompose(classes: np.ndarray, period: int
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Algorithm 1 (verbatim): split the first cycle window of the LM/NLM
+    series into (ArrayLM, ArrayNLM) moment-index arrays; also returns the
+    (period,) LM profile used by Algorithm 2."""
+    c = np.asarray(classes[:period], np.int8)
+    idx = np.arange(len(c))
+    array_lm = idx[c == 1]
+    array_nlm = idx[c != 1]
+    return array_lm, array_nlm, c
+
+
+def fold_profile(classes: np.ndarray, period: int) -> np.ndarray:
+    """'alma-plus': phase-folded majority vote across all observed cycles."""
+    n = (len(classes) // period) * period
+    if n == 0:
+        return np.asarray(classes[:period], np.int8)
+    folded = np.asarray(classes[:n]).reshape(-1, period)
+    return (folded.mean(axis=0) >= 0.5).astype(np.int8)
+
+
+def fit_cycle_batch(classes_batch: np.ndarray, *, min_period: int = 2,
+                    max_period: Optional[int] = None,
+                    folded: bool = False,
+                    use_kernel: Optional[bool] = None) -> list:
+    """Fleet-scale cycle recognition: one batched (Pallas MXU-DFT) power
+    spectrum for all jobs, then per-job peak pick + refinement. This is the
+    path the Fig. 10 scalability benchmark exercises — the per-job python
+    dispatch of calling ``fit_cycle`` in a loop dominates beyond ~100 jobs.
+    """
+    X = np.asarray(classes_batch, np.float32)
+    J, n = X.shape
+    max_p = min(max_period or n // 2, n // 2)
+    if use_kernel is None:
+        use_kernel = kops.on_tpu()     # interpret-mode DFT is for validation,
+                                       # not CPU throughput
+    if use_kernel and kops.dft_supported(n):
+        P = np.asarray(kops.power_spectrum(X - X.mean(axis=1, keepdims=True)))
+    else:
+        F = np.fft.rfft(X - X.mean(axis=1, keepdims=True), axis=1)
+        P = (F.real ** 2 + F.imag ** 2).astype(np.float32)
+    ks = np.arange(P.shape[1])
+    with np.errstate(divide="ignore"):
+        periods = np.where(ks > 0, n / np.maximum(ks, 1), np.inf)
+    valid = (periods >= min_period) & (periods <= max_p)
+    Pv = np.where(valid[None, :], P, -1.0)
+    Pv[:, 0] = -1.0
+    k_star = np.argmax(Pv, axis=1)
+    conf = P[np.arange(J), k_star] / np.maximum(P[:, 1:].sum(axis=1), 1e-12)
+    out = []
+    for j in range(J):
+        if Pv[j, k_star[j]] <= 0:
+            out.append(CycleModel(0, 0.0, np.asarray(
+                [1 if X[j].mean() >= 0.5 else 0], np.int8)))
+            continue
+        p0 = int(round(n / k_star[j]))
+        period = _refine_period(X[j].astype(np.float64), p0, min_period,
+                                max_p)
+        cls = np.asarray(classes_batch[j], np.int8)
+        array_lm, array_nlm, profile = decompose(cls, period)
+        if folded:
+            profile = fold_profile(cls, period)
+            idx = np.arange(period)
+            array_lm, array_nlm = idx[profile == 1], idx[profile != 1]
+        out.append(CycleModel(period, float(conf[j]), profile, array_lm,
+                              array_nlm))
+    return out
+
+
+def fit_cycle(classes: np.ndarray, *, min_period: int = 2,
+              max_period: Optional[int] = None, folded: bool = False,
+              use_kernel: bool = True) -> CycleModel:
+    """Characterized series -> CycleModel (the paper pipeline in one call)."""
+    period, conf = cycle_length(classes.astype(np.float32),
+                                min_period=min_period, max_period=max_period,
+                                use_kernel=use_kernel)
+    if period <= 1:
+        profile = np.asarray([1 if np.mean(classes) >= 0.5 else 0], np.int8)
+        return CycleModel(0, conf, profile)
+    array_lm, array_nlm, profile = decompose(classes, period)
+    if folded:
+        profile = fold_profile(classes, period)
+        idx = np.arange(period)
+        array_lm, array_nlm = idx[profile == 1], idx[profile != 1]
+    return CycleModel(period, conf, profile, array_lm, array_nlm)

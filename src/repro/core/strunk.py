@@ -1,0 +1,91 @@
+"""Pre-copy live-migration cost model (paper §3.2, Strunk's bounds).
+
+Implements Inequalities 1–2 and an iterative pre-copy simulator with the Xen
+stop conditions the paper lists: (i) fewer than ``stop_dirty_pages`` dirty
+pages since the last round, (ii) at most ``max_rounds`` rounds, (iii) total
+transfer capped at ``stop_total_factor`` x V_mem. Dirty rate may be a
+constant or a callable of absolute time, which is how the fleet simulator
+injects the *workload-phase-dependent* dirty rate — the whole point of the
+paper: the same migration started in an NLM phase costs multiples of one
+started in an LM phase.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Tuple, Union
+
+DirtyRate = Union[float, Callable[[float], float]]
+
+PAGE = 4096
+XEN_MAX_ROUNDS = 29
+XEN_STOP_DIRTY_PAGES = 50
+XEN_STOP_TOTAL_FACTOR = 3.0
+
+
+def strunk_bounds(v_mem: float, bandwidth: float,
+                  max_rounds: int = XEN_MAX_ROUNDS) -> Tuple[float, float]:
+    """(T_mig lower, upper) per Inequality 1: V/B <= T <= (M+1)V/B."""
+    return v_mem / bandwidth, (max_rounds + 1) * v_mem / bandwidth
+
+
+@dataclass
+class MigrationOutcome:
+    total_time: float          # paper's 'live migration total time'
+    downtime: float            # stop-and-copy duration
+    bytes_sent: float          # 'network data transfer'
+    rounds: int
+    stop_reason: str
+
+
+def simulate_precopy(v_mem: float, bandwidth: float, dirty_rate: DirtyRate,
+                     *, start_time: float = 0.0, page: int = PAGE,
+                     max_rounds: int = XEN_MAX_ROUNDS,
+                     stop_dirty_pages: int = XEN_STOP_DIRTY_PAGES,
+                     stop_total_factor: float = XEN_STOP_TOTAL_FACTOR,
+                     ) -> MigrationOutcome:
+    """Iterative pre-copy (paper §3.2 five-stage algorithm, stages 2–3).
+
+    Round 0 copies all of V_mem; round i copies the bytes dirtied during
+    round i-1. ``dirty_rate(t)`` is sampled at absolute time ``t`` so cyclic
+    workloads produce cyclic migration costs.
+    """
+    rate = dirty_rate if callable(dirty_rate) else (lambda _t: float(dirty_rate))
+    t = start_time
+    sent = 0.0
+    to_copy = v_mem
+    rounds = 0
+    reason = "max_rounds"
+    while True:
+        dt = to_copy / bandwidth
+        # dirty bytes accrued while this round's copy is in flight (sample the
+        # rate midway through the round — adequate for piecewise traces)
+        dirtied = min(v_mem, max(0.0, rate(t + 0.5 * dt)) * dt)
+        sent += to_copy
+        t += dt
+        rounds += 1
+        if dirtied <= stop_dirty_pages * page:
+            reason = "dirty_low"
+            to_copy = dirtied
+            break
+        if rounds >= max_rounds:
+            reason = "max_rounds"
+            to_copy = dirtied
+            break
+        if sent + dirtied > stop_total_factor * v_mem:
+            reason = "total_cap"
+            to_copy = dirtied
+            break
+        to_copy = dirtied
+
+    downtime = to_copy / bandwidth                   # stop-and-copy
+    sent += to_copy
+    t += downtime
+    return MigrationOutcome(total_time=t - start_time, downtime=downtime,
+                            bytes_sent=sent, rounds=rounds, stop_reason=reason)
+
+
+def expected_cost(v_mem: float, bandwidth: float, dirty_rate: DirtyRate,
+                  start_time: float = 0.0) -> float:
+    """Scalar cost used by the 'alma-plus' window chooser: total bytes sent."""
+    return simulate_precopy(v_mem, bandwidth, dirty_rate,
+                            start_time=start_time).bytes_sent

@@ -1,0 +1,68 @@
+"""Load-index telemetry — the TPU analogue of the paper's 15-second SNMP
+samples (§4, §6.4.1).
+
+Each job (training/serving replica) owns a ``TelemetryBuffer``; the runtime
+records one sample per step with exact in-process load indexes (no semantic
+gap): dirty-bytes of the last update, collective bytes, step time, tokens/s.
+The LMCM reads fixed-length windows for characterization. Gathering overhead
+is measured in ``benchmarks/fig11_gathering.py``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_FIELDS: Tuple[str, ...] = (
+    "step_time", "dirty_bytes", "dirty_fraction", "collective_bytes",
+    "compute_util", "hbm_util",
+)
+
+
+class TelemetryBuffer:
+    """Fixed-capacity ring buffer of per-step load indexes."""
+
+    def __init__(self, capacity: int = 8192,
+                 fields: Sequence[str] = DEFAULT_FIELDS):
+        self.fields = tuple(fields)
+        self.capacity = capacity
+        self._data = np.zeros((capacity, len(self.fields)), np.float64)
+        self._steps = np.full(capacity, -1, np.int64)
+        self._n = 0
+        self._lock = threading.Lock()
+
+    def record(self, step: int, **indexes: float) -> None:
+        with self._lock:
+            i = self._n % self.capacity
+            for j, f in enumerate(self.fields):
+                self._data[i, j] = float(indexes.get(f, 0.0))
+            self._steps[i] = step
+            self._n += 1
+
+    def __len__(self) -> int:
+        return min(self._n, self.capacity)
+
+    def latest_step(self) -> int:
+        with self._lock:
+            if self._n == 0:
+                return -1
+            return int(self._steps[(self._n - 1) % self.capacity])
+
+    def window(self, n: int) -> np.ndarray:
+        """Most recent ``n`` samples, oldest first. Shape (m<=n, F)."""
+        with self._lock:
+            m = min(n, len(self))
+            if m == 0:
+                return np.zeros((0, len(self.fields)))
+            end = self._n % self.capacity
+            idx = (np.arange(self._n - m, self._n)) % self.capacity
+            return self._data[idx].copy()
+
+    def series(self, field: str, n: Optional[int] = None) -> np.ndarray:
+        j = self.fields.index(field)
+        return self.window(n if n is not None else len(self))[:, j]
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        w = self.window(len(self))
+        return {f: w[:, j] for j, f in enumerate(self.fields)}

@@ -1,0 +1,3 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_batch, token_stream, SyntheticCorpus,
+)

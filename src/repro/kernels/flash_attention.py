@@ -1,0 +1,96 @@
+"""Fused causal GQA flash attention (forward) with optional sliding window.
+
+The substrate's compute hot spot for 32k-token prefill. Online-softmax over
+KV tiles with running (m, l, acc) in VMEM scratch; GQA folds the query-head
+-> kv-head mapping into the K/V BlockSpec index maps so kv tiles are
+fetched once per query-head group member without a gather. Fully-masked
+future KV tiles are skipped with ``pl.when`` (the triangular saving).
+
+Grid: (B, H, q_tiles, kv_tiles), kv innermost. Tiles are 128-aligned for the
+MXU; the (BQ, BK) logits tile plus q/k/v tiles stay well under VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, window,
+            bq, bk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    # causal tile skip: this kv tile starts after the last query row
+    @pl.when(ki * bk <= qi * bq + bq - 1)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (BQ, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (BK, D)
+        s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = rows >= cols
+        if window > 0:
+            mask &= rows - cols < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_s[...], jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_s[...] - m_new)
+        l_s[...] = l_s[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * corr + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    window: int = 0, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D). Causal; window > 0 adds SWA.
+
+    Returns (B, H, S, D) in q's dtype. S must divide by the tile sizes
+    (prefill shapes are powers of two; ops.py falls back otherwise).
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    scale = D ** -0.5
+    kern = functools.partial(_kernel, scale=scale, window=window, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        grid=(B, H, S // bq, S // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, qi, ki: (b, h, qi, 0)),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v)

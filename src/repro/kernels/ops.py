@@ -1,0 +1,84 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels are *targeted* at TPU and validated in interpret mode — see the
+system-level note in DESIGN.md). Wrappers fall back to the jnp reference
+when a shape doesn't meet the kernel's tiling contract, so callers never
+have to care.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dirty_delta as _dd
+from repro.kernels import dft as _dft
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+# ---------------------------------------------------------------------------
+# dirty blocks (pre-copy)
+# ---------------------------------------------------------------------------
+def dirty_blocks(new: jnp.ndarray, old: jnp.ndarray,
+                 threshold: float = 0.0) -> jnp.ndarray:
+    """(n_blocks, block) x2 -> (n_blocks,) bool dirty mask.
+
+    Float dtypes go through the Pallas max-|delta| kernel; integer dtypes use
+    an exact != reduction (f32 casting could alias distinct int32 values).
+    """
+    if not jnp.issubdtype(new.dtype, jnp.floating):
+        return jnp.any(new != old, axis=1)
+    d = _dd.max_abs_delta(new, old, interpret=_interpret())
+    return d[:, 0] > threshold
+
+
+# ---------------------------------------------------------------------------
+# DFT power spectrum (cycle recognition)
+# ---------------------------------------------------------------------------
+def dft_supported(n: int) -> bool:
+    return n % _dft.T_TILE == 0 and 0 < n <= _dft.MAX_N
+
+
+def power_spectrum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, N) -> (B, N//2+1) one-sided power spectrum."""
+    B, N = x.shape
+    if dft_supported(N):
+        p = _dft.dft_power(x.astype(jnp.float32), interpret=_interpret())
+    else:
+        p = ref.dft_power_ref(x)
+    return p[:, : N // 2 + 1]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (prefill hot path)
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, window: int = 0) -> jnp.ndarray:
+    S = q.shape[2]
+    if S % _fa.DEFAULT_BQ == 0:
+        return _fa.flash_attention(q, k, v, window=window,
+                                   interpret=_interpret())
+    return ref.attention_ref(q, k, v, window=window)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan (Mamba2/RWKV6)
+# ---------------------------------------------------------------------------
+def ssm_scan(q, k, v, log_decay, *, bonus=None, ssd: bool = True):
+    S = q.shape[2]
+    if S % _ssm.DEFAULT_CHUNK == 0:
+        return _ssm.ssm_scan(q, k, v, log_decay, bonus=bonus, ssd=ssd,
+                             interpret=_interpret())
+    return ref.gla_chunked(q, k, v, log_decay,
+                           bonus=bonus if not ssd else None)

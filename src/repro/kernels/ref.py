@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (per-kernel allclose tests sweep
+shapes/dtypes against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.gla import gla_chunked  # noqa: F401  (oracle for ssm_scan)
+
+
+def max_abs_delta_ref(new: jnp.ndarray, old: jnp.ndarray) -> jnp.ndarray:
+    """(n_blocks, block) x2 -> (n_blocks, 1) f32."""
+    d = jnp.abs(new.astype(jnp.float32) - old.astype(jnp.float32))
+    return jnp.max(d, axis=1, keepdims=True)
+
+
+def dft_power_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, N) f32 -> (B, N) full power spectrum via complex FFT."""
+    f = jnp.fft.fft(x.astype(jnp.float32), axis=-1)
+    return (f.real ** 2 + f.imag ** 2).astype(jnp.float32)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  window: int = 0) -> jnp.ndarray:
+    """Naive causal GQA attention. q: (B,H,S,D); k,v: (B,Hkv,S,D)."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kx.astype(jnp.float32)) * D ** -0.5
+    pos = np.arange(S)
+    mask = pos[:, None] >= pos[None, :]
+    if window > 0:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(jnp.asarray(mask)[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def ssm_scan_ref(q, k, v, log_decay, *, bonus=None, ssd: bool = True):
+    """Step-by-step exact recurrence — the strongest oracle for ssm_scan
+    (independent of the chunked decomposition)."""
+    from repro.models.gla import clamp_log_decay
+    B, H, S, Dk = q.shape
+    Dv = v.shape[-1]
+    f32 = jnp.float32
+    w = jnp.exp(clamp_log_decay(log_decay.astype(f32)))
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+
+    def step(state, xs):
+        qt, kt, vt, wt = xs                      # (B,H,Dk/Dv)
+        kv = kt[..., :, None] * vt[..., None, :]
+        if ssd:
+            state = wt[..., None] * state + kv
+            y = jnp.einsum("bhd,bhdv->bhv", qt, state)
+        else:
+            y = jnp.einsum("bhd,bhdv->bhv", qt, state)
+            y = y + jnp.einsum("bhd,hd,bhd->bh", qt,
+                               bonus.astype(f32), kt)[..., None] * vt
+            state = wt[..., None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (qf, kf, vf, w))
+    state0 = jnp.zeros((B, H, Dk, Dv), f32)
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(v.dtype), state

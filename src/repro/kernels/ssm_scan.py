@@ -1,0 +1,109 @@
+"""Chunked gated-linear-attention scan kernel (Mamba2 SSD / RWKV6 WKV).
+
+Identical math to ``repro.models.gla.gla_chunked`` (the jnp oracle), with the
+chunk loop as the innermost sequential grid dimension and the (Dk, Dv) state
+carried in VMEM scratch across chunks — the canonical TPU pattern for linear
+recurrences. Intra-chunk work is all matmuls: the cumulative log-decay is a
+lower-triangular-ones matmul, the masked (Q, Q) score tile and both readout
+products hit the MXU.
+
+Grid: (B, H, n_chunks). Static ``ssd`` flag selects SSD semantics
+(mask j<=t) vs RWKV (strict past + diagonal bonus ``u``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.models.gla import LOG_DECAY_CLAMP
+
+DEFAULT_CHUNK = 32
+
+
+def _kernel(q_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state_ref, st_s, *,
+            ssd: bool, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+    Q = chunk
+
+    @pl.when(ci == 0)
+    def _init():
+        st_s[...] = jnp.zeros_like(st_s)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (Q, Dk)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)                 # (Q, Dv)
+    lw = jnp.clip(lw_ref[0, 0].astype(jnp.float32), -LOG_DECAY_CLAMP, 0.0)
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = (rows >= cols).astype(jnp.float32)
+    L = jax.lax.dot(tril, lw, preferred_element_type=jnp.float32)  # incl. cumsum
+    Lq = L if ssd else L - lw
+    shift = L[Q // 2: Q // 2 + 1, :]                    # (1, Dk)
+
+    q_in = q * jnp.exp(Lq - shift)
+    k_in = k * jnp.exp(shift - L)
+    s = jax.lax.dot(q_in, k_in.T, preferred_element_type=jnp.float32)
+    mask = (rows >= cols) if ssd else (rows > cols)
+    s = jnp.where(mask, s, 0.0)
+    if not ssd:
+        u = u_ref[0].astype(jnp.float32)                # (Dk,)
+        diag = jnp.sum(q * u[None, :] * k, axis=1)      # (Q,)
+        s = s + jnp.where(rows == cols, diag[:, None], 0.0)
+
+    y = jax.lax.dot(s, v, preferred_element_type=jnp.float32)
+    y += jax.lax.dot(q * jnp.exp(Lq), st_s[...],
+                     preferred_element_type=jnp.float32)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    L_tot = L[Q - 1: Q, :]                              # (1, Dk)
+    k_out = k * jnp.exp(L_tot - L)                      # (Q, Dk)
+    st_s[...] = (jnp.exp(L_tot).T * st_s[...]
+                 + jax.lax.dot(k_out.T, v, preferred_element_type=jnp.float32))
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        state_ref[0, 0] = st_s[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ssd", "chunk", "interpret"))
+def ssm_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             log_decay: jnp.ndarray, *, bonus=None, ssd: bool = True,
+             chunk: int = DEFAULT_CHUNK, interpret: bool = True):
+    """q/k/log_decay: (B, H, S, Dk); v: (B, H, S, Dv).
+
+    Returns (y (B,H,S,Dv) in v.dtype, final_state (B,H,Dk,Dv) f32).
+    ``ssd=False`` selects RWKV semantics and requires ``bonus`` (H, Dk).
+    """
+    B, H, S, Dk = q.shape
+    Dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    if bonus is None:
+        bonus = jnp.zeros((H, Dk), jnp.float32)
+    kern = functools.partial(_kernel, ssd=ssd, chunk=chunk)
+    y, state = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((B, H, S, Dv), v.dtype),
+                   jax.ShapeDtypeStruct((B, H, Dk, Dv), jnp.float32)),
+        grid=(B, H, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, Dk), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, Dk), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, Dv), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, Dk), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, Dk), lambda b, h, ci: (h, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, chunk, Dv), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Dk, Dv), lambda b, h, ci: (b, h, 0, 0)),
+        ),
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, log_decay, bonus)
+    return y, state

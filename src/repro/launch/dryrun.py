@@ -1,0 +1,219 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and record memory / cost / collective analyses.
+
+This is deliverable (e): it proves the distribution config is coherent
+without hardware. The two mesh targets are the single-pod 16x16 (256 chips,
+('data','model')) and the 2-pod 2x16x16 (512 chips, ('pod','data','model')).
+
+Usage:
+  python -m repro.launch.dryrun --arch internlm2_1p8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all          # every cell, one subprocess each
+  python -m repro.launch.dryrun --all --mesh multi
+
+Results append to experiments/dryrun/<arch>_<shape>_<mesh>.json; the roofline
+benchmark (benchmarks/roofline.py) consumes these files.
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, shapes_for, SHAPES
+from repro.launch import sharding
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models import dist, lm
+from repro.train import make_train_step, make_prefill_step, make_decode_step
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _coerce(v: str):
+    for conv in (int, float):
+        try:
+            return conv(v)
+        except ValueError:
+            pass
+    return {"true": True, "false": False}.get(v.lower(), v)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict = None, inner_shard: bool = False,
+               free_cache_out: bool = False):
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if inner_shard:
+        sharding.EXPERT_INNER_SHARD = True
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mode, args = input_specs(cfg, shape)
+    constrain = sharding.make_constrain(mesh, cfg)
+    constrain_logits = sharding.make_constrain_logits(mesh)
+    ctx = dist.DistContext(
+        mesh=mesh, batch_axes=batch_axes(mesh), tp_axis="model",
+        seq_shard=cfg.seq_shard,
+        expert_inner_shard=sharding.EXPERT_INNER_SHARD)
+
+    with mesh, dist.use(ctx):
+        if mode == "train":
+            fn = make_train_step(cfg, constrain=constrain,
+                                 constrain_logits=constrain_logits)
+            in_sh = (sharding.state_shardings(mesh, args[0]),
+                     sharding.batch_shardings(mesh, args[1]))
+            out_sh = (in_sh[0], None)
+        elif mode == "prefill":
+            fn = make_prefill_step(cfg, cache_len=shape.seq_len,
+                                   constrain=constrain)
+            in_sh = (sharding.param_shardings(mesh, args[0]),
+                     sharding.batch_shardings(mesh, args[1]))
+            if free_cache_out:
+                # §Perf iteration: let XLA keep the cache in the layout the
+                # compute produced; the prefill->decode reshard happens once
+                # at hand-off instead of per layer inside prefill
+                out_sh = None
+            else:
+                cache_spec = jax.eval_shape(fn, *args)[1]
+                out_sh = (None, sharding.cache_shardings(mesh, cfg,
+                                                         cache_spec))
+        else:  # decode
+            fn = make_decode_step(cfg, constrain=constrain)
+            in_sh = (sharding.param_shardings(mesh, args[0]),
+                     sharding.batch_shardings(mesh, {"tokens": args[1]})["tokens"],
+                     sharding.cache_shardings(mesh, cfg, args[2]))
+            out_sh = (in_sh[1], None, in_sh[2])
+
+        donate = {"train": (0,), "prefill": (), "decode": (2,)}[mode]
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        return lowered, mode, mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict = None, inner_shard: bool = False,
+             free_cache_out: bool = False) -> dict:
+    t0 = time.time()
+    lowered, mode, mesh = lower_cell(arch, shape_name, multi_pod,
+                                     overrides, inner_shard, free_cache_out)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    mem_d = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        mem_d[f] = int(getattr(mem, f, 0) or 0)
+    flops_xla = float(cost.get("flops", 0.0)) if cost else 0.0
+    bytes_xla = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    hlo = analyze(compiled.as_text())          # loop-trip-count aware
+
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": int(n_dev),
+        "mode": mode,
+        "memory": mem_d,
+        "flops": hlo["flops"],
+        "hbm_bytes": hlo["hbm_bytes"],
+        "hbm_write_bytes": hlo["hbm_write_bytes"],
+        "collectives": {k[5:]: v for k, v in hlo.items()
+                        if k.startswith("coll_")},
+        "xla_cost_analysis": {"flops": flops_xla,
+                              "bytes_accessed": bytes_xla},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "ok": True,
+    }
+    print(f"[dryrun] {arch} {shape_name} {'multi' if multi_pod else 'single'}"
+          f" OK flops={hlo['flops']:.3e} hbm={hlo['hbm_bytes']:.3e}"
+          f" coll={hlo.get('coll_total', 0):.3e}"
+          f" temp={mem_d['temp_size_in_bytes']/2**30:.2f}GiB"
+          f" args={mem_d['argument_size_in_bytes']/2**30:.2f}GiB"
+          f" lower={t_lower:.0f}s compile={t_compile:.0f}s")
+    return rec
+
+
+def cells(mesh_sel: str):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in shapes_for(cfg):
+            for m in (["single", "multi"] if mesh_sel == "both" else [mesh_sel]):
+                yield arch, shape.name, m
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells that already have results")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="perf-iteration config override key=value")
+    ap.add_argument("--inner-shard", action="store_true",
+                    help="expert FFN inner-dim sharding instead of ZeRO-3")
+    ap.add_argument("--free-cache-out", action="store_true",
+                    help="prefill: let XLA pick the cache output layout")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (perf iterations)")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        failures = []
+        for arch, shape, m in cells(args.mesh):
+            out = OUT_DIR / f"{arch}_{shape}_{m}.json"
+            if out.exists() and not args.force:
+                print(f"[dryrun] skip {out.name} (exists)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", m]
+            r = subprocess.run(cmd, cwd=str(OUT_DIR.parents[1]))
+            if r.returncode != 0:
+                failures.append((arch, shape, m))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("[dryrun] all cells OK")
+        return
+
+    assert args.arch and args.shape and args.mesh in ("single", "multi")
+    tag = f"_{args.tag}" if args.tag else ""
+    out = OUT_DIR / f"{args.arch}_{args.shape}_{args.mesh}{tag}.json"
+    overrides = dict(kv.split("=", 1) for kv in args.overrides)
+    overrides = {k: _coerce(v) for k, v in overrides.items()}
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh == "multi",
+                       overrides or None, args.inner_shard,
+                       args.free_cache_out)
+        rec["tag"] = args.tag
+        rec["overrides"] = overrides
+    except Exception as e:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "ok": False, "error": f"{type(e).__name__}: {e}"}
+        out.write_text(json.dumps(rec, indent=2))
+        traceback.print_exc()
+        sys.exit(1)
+    out.write_text(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state — the dry-run must set
+XLA_FLAGS before any jax initialization.
+
+Axis semantics:
+  pod   — outer data-parallel axis across pods (params replicated across it;
+          gradient all-reduce crosses the inter-pod links)
+  data  — in-pod data parallelism; also the FSDP/ZeRO shard axis for params
+          and optimizer state
+  model — tensor/expert parallelism (attention heads, FFN, expert axis);
+          also the sequence-sharding axis when cfg.seq_shard is on
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Smoke-scale mesh over whatever devices exist (CPU tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

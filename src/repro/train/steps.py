@@ -1,0 +1,147 @@
+"""train_step / prefill_step / serve_step builders.
+
+These are the functions the launcher jits (and the multi-pod dry-run
+lowers). They are mesh-agnostic: sharding enters only through the
+``in_shardings``/``out_shardings`` the launcher attaches and through the
+optional residual-stream ``constrain`` hook (sequence sharding).
+
+Telemetry for ALMA is produced here: every train step reports the
+dirty-block profile of the update (fraction of parameter blocks touched
+beyond a threshold) plus step-level load indexes — the TPU analogue of the
+paper's 15-second SNMP samples (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro import optim
+
+TrainState = Dict[str, Any]
+
+
+def init_train_state(cfg: ArchConfig, rng) -> TrainState:
+    params = lm.init_params(cfg, rng)
+    return {
+        "params": params,
+        "opt": optim.init_opt_state(cfg, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dirty-block telemetry (ALMA load index: the pre-copy 'dirty page rate')
+# ---------------------------------------------------------------------------
+DIRTY_BLOCK = 1 << 14          # 16k-element blocks ~= 32 KiB bf16 "pages"
+
+
+def dirty_block_stats(old_params, new_params,
+                      block: int = DIRTY_BLOCK) -> Dict[str, jnp.ndarray]:
+    """Per-update dirty profile: fraction of `block`-sized chunks that changed
+    and total bytes changed. This is what the paper measures as MEM dirty rate
+    through SNMP; here it is exact, computed from the update itself."""
+    dirty_blocks = jnp.zeros((), jnp.float32)
+    total_blocks = jnp.zeros((), jnp.float32)
+    dirty_bytes = jnp.zeros((), jnp.float32)
+    for o, n in zip(jax.tree.leaves(old_params), jax.tree.leaves(new_params)):
+        of = o.reshape(-1).astype(jnp.float32)
+        nf = n.reshape(-1).astype(jnp.float32)
+        nb = -(-of.shape[0] // block)
+        pad = nb * block - of.shape[0]
+        diff = jnp.pad(jnp.abs(nf - of), (0, pad)).reshape(nb, block)
+        changed = jnp.any(diff > 0, axis=1)
+        dirty_blocks += jnp.sum(changed.astype(jnp.float32))
+        total_blocks += nb
+        dirty_bytes += jnp.sum(changed) * block * o.dtype.itemsize
+    return {"dirty_fraction": dirty_blocks / jnp.maximum(total_blocks, 1),
+            "dirty_bytes": dirty_bytes}
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, *, constrain: Callable = lm.Identity,
+                    constrain_logits: Callable = lm.Identity,
+                    telemetry: bool = False,
+                    schedule: Optional[Callable] = None):
+    """Returns fn(state, batch) -> (state, metrics). Gradient accumulation
+    over ``cfg.accum_steps`` microbatches (scan; grads accumulated in f32)."""
+    schedule = schedule or optim.make_schedule(cfg)
+
+    def loss_fn(params, microbatch):
+        return lm.lm_loss(params, cfg, microbatch, constrain=constrain,
+                          constrain_logits=constrain_logits)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        params = state["params"]
+        A = cfg.accum_steps
+        if A == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape(A, x.shape[0] // A, *x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), m
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), ms = lax.scan(acc_body, (g0, jnp.zeros(())), micro)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = loss / A
+            metrics = jax.tree.map(lambda x: jnp.mean(x, axis=0)
+                                   if x.ndim else x, ms)
+
+        lr = schedule(state["step"])
+        new_params, new_opt, gnorm = optim.apply_updates(
+            cfg, params, grads, state["opt"], lr)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        if telemetry:
+            metrics.update(dirty_block_stats(params, new_params))
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig, cache_len: int, *,
+                      constrain: Callable = lm.Identity):
+    """fn(params, batch) -> (last_logits (B, V), cache)."""
+
+    def prefill_step(params, batch):
+        x, _, cache = lm.forward(params, cfg, batch, constrain=constrain,
+                                 want_cache=True, cache_len=cache_len)
+        logits = lm._head(cfg, params, x[:, -1:, :])[:, 0]
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, constrain: Callable = lm.Identity,
+                     greedy: bool = True):
+    """serve_step: fn(params, token (B,1), cache) -> (next_token, logits, cache)."""
+
+    def serve_step(params, token, cache):
+        logits, cache = lm.decode_step(params, cfg, token, cache,
+                                       constrain=constrain)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+
+    return serve_step

@@ -1,0 +1,16 @@
+# NOTE: deliberately no XLA_FLAGS here — smoke tests and benches must see the
+# real single CPU device; only launch/dryrun.py forces 512 host devices.
+import os
+
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None,
+                          derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

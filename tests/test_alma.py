@@ -1,0 +1,121 @@
+"""ALMA core invariants: Naive Bayes characterization, FFT cycle recognition
+(Alg. 1) and the POSTPONE moment computation (Alg. 2) — unit + property
+tests (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import characterize, cycles, postpone as pp
+from repro.core.fleetsim import WorkloadTrace, make_training_nb
+
+# ---------------------------------------------------------------------------
+# Naive Bayes
+# ---------------------------------------------------------------------------
+def test_nb_learns_separable_phases():
+    nb = make_training_nb()
+    rng = np.random.default_rng(0)
+    trace = WorkloadTrace([("CPU", 10), ("MEM", 10), ("IO", 10),
+                           ("IDLE", 10)], 40)
+    feats, labels = [], []
+    for t in np.arange(0.5, 40.0, 0.25):
+        s = trace.sample_indexes(t, rng)
+        feats.append([s[f] for f in ("step_time", "dirty_bytes",
+                                     "dirty_fraction", "collective_bytes",
+                                     "compute_util", "hbm_util")])
+        labels.append(trace.label_at(t))
+    cls, lm, post = characterize.classify_series(
+        nb, np.asarray(feats, np.float32))
+    acc = np.mean(cls == np.asarray(labels))
+    assert acc > 0.9, acc
+    # MEM phases must be NLM, the rest LM
+    assert np.all(lm[np.asarray(labels) == characterize.MEM] == 0)
+
+
+def test_nb_posterior_normalized():
+    nb = make_training_nb()
+    x = np.random.default_rng(1).random((17, 6)).astype(np.float32)
+    _, post = characterize.classify_series(nb, x)[0], \
+        characterize.classify_series(nb, x)[2]
+    np.testing.assert_allclose(post.sum(axis=1), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cycle recognition (FFT / Alg. 1)
+# ---------------------------------------------------------------------------
+@given(period=st.integers(4, 48), reps=st.integers(4, 12),
+       duty=st.floats(0.2, 0.8))
+def test_fft_recovers_planted_period(period, reps, duty):
+    lm_len = max(1, int(period * duty))
+    pattern = np.array([1] * lm_len + [0] * (period - lm_len), np.int8)
+    series = np.tile(pattern, reps)
+    got, conf = cycles.cycle_length(series.astype(np.float32),
+                                    max_period=period * 2, use_kernel=False)
+    # FFT bin quantization: accept the true period within one bin's width
+    n = len(series)
+    k_true = round(n / period)
+    assert abs(got - period) <= max(1, period // k_true), (got, period)
+
+
+def test_decompose_is_algorithm1():
+    classes = np.array([1, 1, 0, 0, 0, 1, 1, 1, 0, 0], np.int8)
+    lm, nlm, profile = cycles.decompose(classes, 5)
+    assert lm.tolist() == [0, 1]
+    assert nlm.tolist() == [2, 3, 4]
+    assert profile.tolist() == [1, 1, 0, 0, 0]
+
+
+def test_complex_cycle_detected():
+    # two NLM intervals per cycle (paper Fig. 4)
+    pattern = [1, 1, 0, 1, 1, 1, 0, 0]
+    series = np.tile(pattern, 10).astype(np.float32)
+    period, conf = cycles.cycle_length(series, use_kernel=False)
+    assert period in (8, 4), period  # 4 is the half-harmonic of the comb
+    model = cycles.fit_cycle(np.tile(pattern, 10).astype(np.int8))
+    assert model.cyclic
+
+
+# ---------------------------------------------------------------------------
+# POSTPONE (Alg. 2)
+# ---------------------------------------------------------------------------
+@given(period=st.integers(3, 60), m=st.integers(0, 10_000),
+       data=st.data())
+def test_postpone_properties(period, m, data):
+    profile = np.asarray(
+        data.draw(st.lists(st.integers(0, 1), min_size=period,
+                           max_size=period)), np.int8)
+    idx = np.arange(period)
+    model = cycles.CycleModel(period, 1.0, profile,
+                              idx[profile == 1], idx[profile != 1])
+    remain = pp.postpone(model, m)
+    m_rel = m % period
+    if profile[m_rel] == 1:
+        assert remain == 0                      # already suitable: fire now
+    else:
+        assert 0 < remain <= period             # bounded wait
+        if profile.any():
+            # after waiting, the workload is at a suitable moment
+            assert profile[(m_rel + remain) % period] == 1
+
+
+@given(period=st.integers(3, 40), m=st.integers(0, 1000), data=st.data())
+def test_postpone_batch_matches_scalar(period, m, data):
+    profile = np.asarray(
+        data.draw(st.lists(st.integers(0, 1), min_size=period,
+                           max_size=period)), np.int8)
+    idx = np.arange(period)
+    model = cycles.CycleModel(period, 1.0, profile,
+                              idx[profile == 1], idx[profile != 1])
+    profiles, periods = pp.pack_fleet([model])
+    import jax.numpy as jnp
+    batch = np.asarray(pp.postpone_batch(profiles, periods,
+                                         jnp.asarray([m], jnp.int32)))[0]
+    scalar = pp.postpone(model, m)
+    if profile.any() and not profile.all():
+        assert batch == scalar % period or batch == scalar, (batch, scalar)
+
+
+def test_postpone_all_nlm_backs_off_one_cycle():
+    profile = np.zeros(10, np.int8)
+    model = cycles.CycleModel(10, 1.0, profile, np.zeros(0, np.int64),
+                              np.arange(10))
+    assert pp.postpone(model, 3) == 10

@@ -1,0 +1,134 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+All kernels run in interpret mode on CPU (the TPU lowering is the target;
+interpret executes the same kernel body)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.dirty_delta import max_abs_delta
+from repro.kernels.dft import dft_power
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssm_scan import ssm_scan
+from repro.models.gla import gla_chunked
+
+RNG = np.random.default_rng(42)
+
+
+def randn(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# dirty_delta
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nb,blk", [(1, 64), (7, 129), (32, 2048), (65, 300)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dirty_delta_sweep(nb, blk, dtype):
+    new = randn(nb, blk, dtype=dtype)
+    old = randn(nb, blk, dtype=dtype)
+    got = max_abs_delta(new, old)
+    want = ref.max_abs_delta_ref(new, old)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_dirty_blocks_exact_detection():
+    new = randn(16, 512, dtype=jnp.bfloat16)
+    old = jnp.array(new)
+    old = old.at[3, 100].add(jnp.bfloat16(0.5)).at[12, 0].add(jnp.bfloat16(-1))
+    d = ops.dirty_blocks(new, old)
+    assert set(np.flatnonzero(np.asarray(d))) == {3, 12}
+
+
+def test_dirty_blocks_int_dtype():
+    new = jnp.arange(4 * 64, dtype=jnp.int32).reshape(4, 64)
+    old = new.at[2, 5].add(1)
+    d = ops.dirty_blocks(new, old)
+    assert set(np.flatnonzero(np.asarray(d))) == {2}
+
+
+# ---------------------------------------------------------------------------
+# dft
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,n", [(1, 128), (3, 256), (9, 512), (2, 1024)])
+def test_dft_power_sweep(b, n):
+    x = randn(b, n)
+    got = dft_power(x)
+    want = ref.dft_power_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-2)
+
+
+def test_dft_finds_planted_period():
+    n = 512
+    t = np.arange(n)
+    x = jnp.asarray(np.sin(2 * np.pi * t / 32)[None, :], jnp.float32)
+    p = np.asarray(ops.power_spectrum(x))[0]
+    assert int(np.argmax(p[1:])) + 1 == n // 32
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,hkv,g,d", [(128, 1, 1, 64), (256, 2, 2, 64),
+                                       (384, 2, 4, 128), (256, 4, 1, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, hkv, g, d, dtype):
+    q = randn(2, hkv * g, s, d, dtype=dtype)
+    k = randn(2, hkv, s, d, dtype=dtype)
+    v = randn(2, hkv, s, d, dtype=dtype)
+    got = flash_attention(q, k, v, bq=128, bk=128)
+    want = ref.attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [64, 128, 500])
+def test_flash_attention_swa(window):
+    q = randn(1, 4, 256, 64)
+    k = randn(1, 2, 256, 64)
+    v = randn(1, 2, 256, 64)
+    got = flash_attention(q, k, v, window=window)
+    want = ref.attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,dk,dv", [(64, 16, 16), (128, 64, 32),
+                                     (96, 32, 64)])
+@pytest.mark.parametrize("ssd", [True, False])
+def test_ssm_scan_sweep(s, dk, dv, ssd):
+    B, H = 2, 3
+    q = randn(B, H, s, dk)
+    k = randn(B, H, s, dk)
+    v = randn(B, H, s, dv)
+    lw = -jnp.abs(randn(B, H, s, dk)) * 0.3
+    u = randn(H, dk) if not ssd else None
+    y_k, st_k = ssm_scan(q, k, v, lw, bonus=u if not ssd else None, ssd=ssd)
+    y_r, st_r = ref.ssm_scan_ref(q, k, v, lw, bonus=u, ssd=ssd)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_matches_gla_chunked():
+    """Kernel and the model's XLA path share the algorithm bit-for-bit-ish."""
+    B, H, S, Dk, Dv = 1, 2, 256, 32, 48
+    q, k = randn(B, H, S, Dk), randn(B, H, S, Dk)
+    v = randn(B, H, S, Dv)
+    lw = -jnp.abs(randn(B, H, S, Dk))
+    y_k, st_k = ssm_scan(q, k, v, lw, ssd=True, chunk=32)
+    y_c, st_c = gla_chunked(q, k, v, lw, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_c),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_c),
+                               rtol=5e-4, atol=5e-4)

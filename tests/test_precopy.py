@@ -1,0 +1,99 @@
+"""Pre-copy live-migration engine invariants.
+
+The central correctness property: after stop-and-copy the destination pytree
+equals the source **exactly**, no matter how the job mutated state between
+rounds. Plus the Xen stop conditions and the Strunk analytic bounds
+(hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import precopy, strunk
+
+
+def _tree(rng, scale=1.0):
+    return {
+        "w1": jnp.asarray(rng.standard_normal((64, 128)) * scale, jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((300,)) * scale, jnp.bfloat16),
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_migration_is_exact_with_live_updates():
+    rng = np.random.default_rng(0)
+    state = {"v": _tree(rng)}
+    calls = {"n": 0}
+
+    def step():
+        calls["n"] += 1
+        state["v"]["w1"] = state["v"]["w1"] + 0.01 * calls["n"]
+        state["v"]["step"] = state["v"]["step"] + 1
+
+    cfg = precopy.PrecopyConfig(block_elems=64, max_rounds=6,
+                                stop_dirty_blocks=0)
+    dest, report = precopy.migrate(lambda: state["v"], step, cfg)
+    # exactness: destination == final source state bit-for-bit
+    for a, b in zip(jax.tree.leaves(dest), jax.tree.leaves(state["v"])):
+        assert jnp.array_equal(a, b), report
+    assert calls["n"] >= 1                       # the job really ran
+    assert report.outcome.rounds <= cfg.max_rounds
+    assert report.outcome.bytes_sent >= report.v_mem
+
+
+def test_idle_job_single_round():
+    rng = np.random.default_rng(1)
+    state = _tree(rng)
+    cfg = precopy.PrecopyConfig(block_elems=128)
+    dest, report = precopy.migrate(lambda: state, None, cfg)
+    assert report.outcome.stop_reason == "dirty_low"
+    assert report.outcome.bytes_sent == report.v_mem  # V_mem, no dirty resend
+    # Strunk lower bound: T >= V/B
+    lo, hi = strunk.strunk_bounds(report.v_mem, cfg.bandwidth)
+    assert lo <= report.outcome.total_time <= hi
+
+
+def test_total_cap_stop_condition():
+    rng = np.random.default_rng(2)
+    state = {"w": jnp.asarray(rng.standard_normal((4096,)), jnp.float32)}
+
+    def hot_step():  # dirty everything every round
+        state["w"] = state["w"] + 1.0
+
+    cfg = precopy.PrecopyConfig(block_elems=64, max_rounds=29,
+                                stop_dirty_blocks=0, stop_total_factor=3.0)
+    dest, report = precopy.migrate(lambda: state["w"], hot_step, cfg)
+    assert report.outcome.stop_reason in ("total_cap", "max_rounds")
+    assert report.outcome.bytes_sent <= (3.0 + 2) * report.v_mem
+
+
+@given(v_mem=st.floats(1e6, 1e10), bw=st.floats(1e7, 1e11),
+       rate_frac=st.floats(0.0, 0.95))
+def test_strunk_simulation_within_bounds(v_mem, bw, rate_frac):
+    """Property: simulated pre-copy obeys Inequality 1 (both bounds)."""
+    out = strunk.simulate_precopy(v_mem, bw, rate_frac * bw)
+    lo, hi = strunk.strunk_bounds(v_mem, bw)
+    assert lo <= out.total_time <= hi * 1.001
+    assert 0 <= out.downtime <= out.total_time
+    assert out.bytes_sent >= v_mem
+
+
+@given(rate1=st.floats(0.0, 0.2), rate2=st.floats(0.5, 0.95))
+def test_dirty_rate_monotonicity(rate1, rate2):
+    """A dirtier workload never migrates cheaper — the paper's core premise."""
+    v, bw = 1e9, 125e6
+    a = strunk.simulate_precopy(v, bw, rate1 * bw)
+    b = strunk.simulate_precopy(v, bw, rate2 * bw)
+    assert a.bytes_sent <= b.bytes_sent
+    assert a.total_time <= b.total_time * 1.001
+
+
+def test_phase_dependent_migration_cost():
+    """Migrating in an LM phase beats an NLM phase (Fig. 2 scenario)."""
+    from repro.core.fleetsim import WorkloadTrace
+    tr = WorkloadTrace([("MEM", 100), ("CPU", 100)], 200)
+    in_mem = strunk.simulate_precopy(1e9, 125e6, tr.dirty_rate, start_time=10)
+    in_cpu = strunk.simulate_precopy(1e9, 125e6, tr.dirty_rate, start_time=110)
+    assert in_cpu.bytes_sent < in_mem.bytes_sent
+    assert in_cpu.total_time < in_mem.total_time
