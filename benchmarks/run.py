@@ -3,6 +3,12 @@
 ``python -m benchmarks.run [names...]`` runs each module, prints the
 ``name,us_per_call,derived`` CSV summary line per benchmark, and writes the
 detailed rows to experiments/bench/<name>.json.
+
+``python -m benchmarks.run --quick`` is the CI smoke entry: fig10 at fleet
+sizes {5, 100, 1000}, asserting the batched surveillance tick beats the
+seed per-job loop >= 10x at 1,000 jobs and that extrapolated saturation
+reaches >= 10,000 jobs, and emitting BENCH_fig10.json at the repo root for
+the cross-PR perf trajectory.
 """
 from __future__ import annotations
 
@@ -11,7 +17,8 @@ import pathlib
 import sys
 import traceback
 
-OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT = ROOT / "experiments" / "bench"
 
 ALL = [
     "table5_nb",
@@ -24,7 +31,42 @@ ALL = [
 ]
 
 
+def quick() -> None:
+    """fig10 smoke: batched tick vs per-job loop at {5, 100, 1000} jobs."""
+    from benchmarks import fig10_scalability
+    summary, rows = fig10_scalability.run(sizes=[5, 100, 1000], reps=3,
+                                          steady_steps=16)
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "fig10_scalability.json").write_text(
+        json.dumps(rows, indent=1, default=str))
+    fit = rows[-1]
+    at_max = next(r for r in rows if r["n_jobs"] == max(
+        r["n_jobs"] for r in rows if isinstance(r["n_jobs"], int)))
+    payload = {
+        "rows": rows,
+        "speedup_at_1000": at_max["speedup"],
+        "tick_full_s_at_1000": at_max["tick_full_s"],
+        "tick_steady_s_at_1000": at_max["tick_steady_s"],
+        "saturation_jobs": fit["saturation_jobs"],
+        "criteria": {"speedup_10x": at_max["speedup"] >= 10.0,
+                     "saturation_10k": fit["saturation_jobs"] >= 10_000},
+    }
+    (ROOT / "BENCH_fig10.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+    print("name,us_per_call,derived")
+    for s in summary:
+        print(f"{s['name']},{s['us_per_call']},{s['derived']}")
+    assert at_max["speedup"] >= 10.0, \
+        f"batched tick only {at_max['speedup']}x faster than per-job loop"
+    assert fit["saturation_jobs"] >= 10_000, \
+        f"extrapolated saturation {fit['saturation_jobs']} < 10k jobs"
+    print(f"QUICK OK: speedup {at_max['speedup']}x, "
+          f"saturation ~{fit['saturation_jobs']} jobs")
+
+
 def main() -> None:
+    if "--quick" in sys.argv[1:]:
+        return quick()
     names = sys.argv[1:] or ALL
     OUT.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")

@@ -18,9 +18,9 @@ from typing import Any, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
 
-from repro.checkpoint.store import (restore_checkpoint, save_checkpoint,
+from repro.checkpoint.store import (CODEC, compress_bytes, decompress_bytes,
+                                    restore_checkpoint, save_checkpoint,
                                     _flatten_with_paths)
 from repro.core.precopy import _leaf_dirty
 
@@ -46,7 +46,6 @@ class IncrementalCheckpointer:
 
         d = self.directory / f"delta_{step:08d}"
         d.mkdir(parents=True, exist_ok=True)
-        cctx = zstandard.ZstdCompressor(level=3)
         manifest = {}
         total = 0
         flat_new = _flatten_with_paths(host)
@@ -71,12 +70,13 @@ class IncrementalCheckpointer:
             blocks = np.pad(nv, (0, pad)).reshape(nb, self.block)[idx]
             fname = f"delta_{i:05d}.bin.zst"
             with open(d / fname, "wb") as f:
-                f.write(cctx.compress(blocks.tobytes()))
+                f.write(compress_bytes(blocks.tobytes()))
             manifest[key] = {"file": fname, "blocks": idx.tolist(),
                              "dtype": str(nv.dtype)}
             total += blocks.nbytes
         (d / "manifest.json").write_text(json.dumps(
-            {"step": step, "block": self.block, "leaves": manifest}))
+            {"step": step, "block": self.block, "codec": CODEC,
+             "leaves": manifest}))
         self._shadow = host
         self._since_full += 1
         return {"kind": "delta", "bytes": total}
@@ -91,7 +91,6 @@ class IncrementalCheckpointer:
         deltas = sorted(int(p.name.split("_")[1])
                         for p in self.directory.glob("delta_*") if p.is_dir())
         flat = _flatten_with_paths(jax.tree.map(np.array, state))
-        dctx = zstandard.ZstdDecompressor()
         for s in deltas:
             if not (base < s <= step):
                 continue
@@ -99,7 +98,8 @@ class IncrementalCheckpointer:
             man = json.loads((d / "manifest.json").read_text())
             blk = man["block"]
             for key, meta in man["leaves"].items():
-                raw = dctx.decompress((d / meta["file"]).read_bytes())
+                raw = decompress_bytes((d / meta["file"]).read_bytes(),
+                                       man.get("codec", "zstd"))
                 blocks = np.frombuffer(raw, np.dtype(meta["dtype"])
                                        ).reshape(len(meta["blocks"]), blk)
                 leaf = flat[key]

@@ -20,7 +20,30 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard
+import zlib
+
+try:
+    import zstandard
+    CODEC = "zstd"
+except ImportError:          # clean containers fall back to stdlib zlib;
+    zstandard = None         # the manifest records which codec wrote the
+    CODEC = "zlib"           # blobs so a mismatch fails loud at restore
+
+
+def compress_bytes(data: bytes) -> bytes:
+    if CODEC == "zstd":
+        return zstandard.ZstdCompressor(level=3).compress(data)
+    return zlib.compress(data, 3)
+
+
+def decompress_bytes(data: bytes, codec: str = "zstd") -> bytes:
+    if codec == "zlib":          # stdlib: readable everywhere
+        return zlib.decompress(data)
+    if zstandard is None:
+        raise RuntimeError(
+            "checkpoint was written with zstd but zstandard is not "
+            "installed in this environment")
+    return zstandard.ZstdDecompressor().decompress(data)
 
 
 def _flatten_with_paths(tree) -> Dict[str, Any]:
@@ -38,16 +61,15 @@ def save_checkpoint(directory: str, step: int, state) -> pathlib.Path:
     tmp.mkdir(parents=True, exist_ok=True)
     flat = _flatten_with_paths(state)
     manifest = {}
-    cctx = zstandard.ZstdCompressor(level=3)
     for i, (key, leaf) in enumerate(flat.items()):
         arr = np.asarray(leaf)
         fname = f"leaf_{i:05d}.bin.zst"
         with open(tmp / fname, "wb") as f:
-            f.write(cctx.compress(arr.tobytes()))
+            f.write(compress_bytes(arr.tobytes()))
         manifest[key] = {"file": fname, "shape": list(arr.shape),
                          "dtype": str(arr.dtype)}
     (tmp / "manifest.json").write_text(json.dumps(
-        {"step": step, "leaves": manifest}))
+        {"step": step, "codec": CODEC, "leaves": manifest}))
     if d.exists():  # atomic replace
         import shutil
         shutil.rmtree(d)
@@ -70,14 +92,15 @@ def restore_checkpoint(directory: str, step: int, like,
     ``shardings``: optional matching tree of NamedShardings — leaves are
     placed directly onto the (possibly different) target mesh."""
     d = pathlib.Path(directory) / f"step_{step:08d}"
-    manifest = json.loads((d / "manifest.json").read_text())["leaves"]
-    dctx = zstandard.ZstdDecompressor()
+    top = json.loads((d / "manifest.json").read_text())
+    manifest = top["leaves"]
+    codec = top.get("codec", "zstd")
     flat_like = _flatten_with_paths(like)
     flat_sh = _flatten_with_paths(shardings) if shardings is not None else {}
     out = {}
     for key, spec in flat_like.items():
         meta = manifest[key]
-        raw = dctx.decompress((d / meta["file"]).read_bytes())
+        raw = decompress_bytes((d / meta["file"]).read_bytes(), codec)
         arr = np.frombuffer(raw, dtype=np.dtype(meta["dtype"])
                             ).reshape(meta["shape"])
         if flat_sh:

@@ -109,6 +109,19 @@ def classify_series(nb: NaiveBayes, window: np.ndarray,
     return cls, lm, np.asarray(post)
 
 
+def classify_series_batch(nb: NaiveBayes, windows: np.ndarray,
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Classify a fleet of telemetry windows (J, T, F) in ONE jitted call —
+    the surveillance-tick entry point (``core/surveillance.py``). Per-row
+    results are identical to ``classify_series`` on each window (the jitted
+    predict flattens leading axes, so reductions stay per-sample).
+
+    Returns (classes (J, T), lm_binary (J, T) {0=NLM,1=LM},
+    posterior (J, T, C)).
+    """
+    return classify_series(nb, windows)     # predict flattens leading axes
+
+
 def primary_secondary(classes: np.ndarray) -> Tuple[int, Optional[int]]:
     """Paper Table 5 reporting: the dominant and runner-up workload class."""
     counts = np.bincount(classes, minlength=len(CLASSES))

@@ -9,13 +9,22 @@ out of the same machinery.
 
 Beyond the paper ('alma-plus'): ``fold_profile`` replaces the first-window
 slice with a phase-folded majority vote over *all* observed cycles (more
-robust to classifier noise), and a confidence score (peak power / total
-power) gates orchestration decisions.
+robust to classifier noise), and a confidence score (peak power / DC-removed
+spectral mass) gates orchestration decisions.
+
+Fleet scale: the scalar path (``fit_cycle``) is a J=1 view of the batched
+path (``fit_cycle_batch``) — one shared spectrum routine, one shared peak
+pick, one shared autocorrelation refinement — so both produce bit-identical
+periods/profiles and confidences for the same series by construction. The
+batched refinement scores the whole fleet against a shared candidate-lag
+grid in one vectorized pass (Pallas ``autocorr_score`` on TPU, f64 einsum
+off-TPU) instead of the per-job Python lag loop that used to dominate
+surveillance ticks beyond ~100 jobs (see ``core/surveillance.py``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -35,69 +44,121 @@ class CycleModel:
         return self.period > 1 and 0 < self.profile_lm.sum() < self.period
 
 
-def power_spectrum(series: np.ndarray, use_kernel: bool = True) -> np.ndarray:
-    """|FFT|^2 of the mean-removed series. Uses the Pallas MXU matmul-DFT
-    kernel (interpret mode on CPU) for the sizes it tiles well; falls back to
-    numpy's pocketfft otherwise."""
-    x = np.asarray(series, np.float32)
-    x = x - x.mean()
-    if use_kernel and kops.dft_supported(x.shape[-1]):
-        return np.asarray(kops.power_spectrum(x[None]))[0]
-    f = np.fft.rfft(x)
-    return (f.real ** 2 + f.imag ** 2).astype(np.float32)
+def _resolve_kernel(use_kernel: Optional[bool]) -> bool:
+    # interpret-mode Pallas is for TPU-lowering validation, not CPU
+    # throughput: off-TPU the default is the pocketfft/numpy path.
+    return kops.on_tpu() if use_kernel is None else use_kernel
 
 
-def cycle_length(series: np.ndarray, *, min_period: int = 2,
-                 max_period: Optional[int] = None,
-                 use_kernel: bool = True) -> Tuple[int, float]:
-    """Dominant cycle length of a series. Returns (period, confidence).
+def _spectra(X: np.ndarray, use_kernel: Optional[bool]) -> np.ndarray:
+    """(J, n) f32 -> (J, n//2+1) one-sided power of the mean-removed rows."""
+    n = X.shape[1]
+    if _resolve_kernel(use_kernel) and kops.dft_supported(n):
+        return np.asarray(kops.power_spectrum(X, center=True))
+    F = np.fft.rfft(X - X.mean(axis=1, keepdims=True), axis=1)
+    return (F.real ** 2 + F.imag ** 2).astype(np.float32)
 
-    period = round(N / k*) with k* the argmax power bin whose implied period
-    lies in [min_period, max_period]; confidence is that bin's share of total
-    (DC-removed) spectral mass.
-    """
-    n = len(series)
-    if n < 2 * min_period:
-        return 0, 0.0
-    max_period = min(max_period or n // 2, n // 2)
-    p = power_spectrum(series, use_kernel=use_kernel)
-    p = p[: n // 2 + 1].copy()
-    p[0] = 0.0                                     # drop DC
-    ks = np.arange(len(p))
+
+def power_spectrum(series: np.ndarray, use_kernel: Optional[bool] = None
+                   ) -> np.ndarray:
+    """One-sided |FFT|^2 of the mean-removed series. Uses the Pallas MXU
+    matmul-DFT kernel (fused mean removal) for the sizes it tiles well;
+    falls back to numpy's pocketfft otherwise."""
+    return _spectra(np.asarray(series, np.float32)[None], use_kernel)[0]
+
+
+def _peak_pick(P: np.ndarray, n: int, min_period: int, max_period: int
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fleet peak pick. P: (J, n//2+1) one-sided power. Returns
+    (k_star (J,), confidence (J,), found (J,) bool)."""
+    ks = np.arange(P.shape[1])
     with np.errstate(divide="ignore"):
         periods = np.where(ks > 0, n / np.maximum(ks, 1), np.inf)
     valid = (periods >= min_period) & (periods <= max_period)
-    if not valid.any() or p[valid].max() <= 0:
-        return 0, 0.0
-    k_star = int(np.argmax(np.where(valid, p, -1.0)))
-    conf = float(p[k_star] / max(p.sum(), 1e-12))
-    p0 = int(round(n / k_star))
-    return _refine_period(np.asarray(series, np.float64), p0,
-                          min_period, max_period), conf
+    Pv = np.where(valid[None, :], P, -1.0)
+    Pv[:, 0] = -1.0                                # drop DC
+    k_star = np.argmax(Pv, axis=1)
+    rows = np.arange(P.shape[0])
+    found = Pv[rows, k_star] > 0
+    # confidence: peak bin's share of the DC-removed one-sided spectral
+    # mass — the single normalization shared by the scalar and batch paths
+    conf = P[rows, k_star] / np.maximum(P[:, 1:].sum(axis=1), 1e-12)
+    return k_star, conf, found
 
 
-def _refine_period(x: np.ndarray, p0: int, min_period: int,
-                   max_period: int) -> int:
-    """Sharpen the FFT bin estimate with a local autocorrelation search.
+def _refine_period_batch(X: np.ndarray, p0: np.ndarray, min_period: int,
+                         max_period: int) -> np.ndarray:
+    """Sharpen FFT bin estimates with a local autocorrelation search, for
+    the whole fleet at once.
 
     FFT periods are quantized to n/k (a 512-sample window puts a true
     120-sample cycle into the 128 bin — enough drift to break Algorithm 2's
     modular indexing four cycles out). The spectral peak still *finds* the
     cycle (the paper's tool); the lag search just de-quantizes it within
-    +/- one bin width.
+    +/- one bin width. All jobs score one shared candidate-lag grid (the
+    union of their per-job windows) in a single vectorized pass; each job's
+    argmax is masked to its own window.
     """
+    J, n = X.shape
+    X = np.asarray(X, np.float64)
+    Xc = X - X.mean(axis=1, keepdims=True)
+    p0 = np.asarray(p0, np.int64)
+    span = np.maximum(2, np.ceil(p0 * p0 / n).astype(np.int64) + 1)
+    lo = np.maximum(min_period, p0 - span)
+    hi = np.minimum(np.minimum(max_period, n - 1), p0 + span)
+    ok = hi >= lo
+    if not ok.any():
+        return p0.copy()
+    if kops.on_tpu() and n <= 2048:
+        # Pallas kernel: fleet x shared candidate-lag grid in one call
+        import jax.numpy as jnp
+        lags = np.arange(int(lo[ok].min()), int(hi[ok].max()) + 1)
+        R = np.asarray(kops.autocorr_score(
+            jnp.asarray(Xc, jnp.float32),
+            jnp.asarray(lags, jnp.int32))).astype(np.float64)
+    else:
+        # off-TPU: Wiener-Khinchin on the zero-padded rows gives the exact
+        # linear autocorrelation R[j, p] = sum_t x[t] x[t+p] at EVERY lag
+        # in one vectorized pocketfft pass (interpret-mode Pallas is not a
+        # CPU hot path)
+        F = np.fft.rfft(Xc, 2 * n, axis=1)
+        R = np.fft.irfft(F.real ** 2 + F.imag ** 2, 2 * n, axis=1)[:, :n]
+        lags = np.arange(n)
+    valid = (lags[None, :] >= lo[:, None]) & (lags[None, :] <= hi[:, None])
+    best = lags[np.argmax(np.where(valid, R, -np.inf), axis=1)]
+    return np.where(ok, best, p0)
+
+
+def _refine_period(x: np.ndarray, p0: int, min_period: int,
+                   max_period: int) -> int:
+    """Scalar view of ``_refine_period_batch`` (kept for API compat)."""
+    return int(_refine_period_batch(np.asarray(x, np.float64)[None],
+                                    np.asarray([p0]), min_period,
+                                    max_period)[0])
+
+
+def cycle_length(series: np.ndarray, *, min_period: int = 2,
+                 max_period: Optional[int] = None,
+                 use_kernel: Optional[bool] = None) -> Tuple[int, float]:
+    """Dominant cycle length of a series. Returns (period, confidence).
+
+    period = round(N / k*) with k* the argmax power bin whose implied period
+    lies in [min_period, max_period], de-quantized by the autocorrelation
+    refinement; confidence is that bin's share of the DC-removed spectral
+    mass.
+    """
+    x = np.asarray(series, np.float32)
     n = len(x)
-    x = x - x.mean()
-    denom = float(x @ x) or 1.0
-    span = max(2, int(np.ceil(p0 * p0 / n)) + 1)
-    lo = max(min_period, p0 - span)
-    hi = min(max_period, n - 1, p0 + span)
-    best_p, best_r = p0, -np.inf
-    for p in range(lo, hi + 1):
-        r = float(x[:-p] @ x[p:]) / denom
-        if r > best_r:
-            best_p, best_r = p, r
-    return best_p
+    if n < 2 * min_period:
+        return 0, 0.0
+    max_p = min(max_period or n // 2, n // 2)
+    P = _spectra(x[None], use_kernel)
+    k_star, conf, found = _peak_pick(P, n, min_period, max_p)
+    if not found[0]:
+        return 0, 0.0
+    p0 = int(round(n / k_star[0]))
+    return _refine_period(np.asarray(series, np.float64), p0,
+                          min_period, max_p), float(conf[0])
 
 
 def decompose(classes: np.ndarray, period: int
@@ -124,40 +185,36 @@ def fold_profile(classes: np.ndarray, period: int) -> np.ndarray:
 def fit_cycle_batch(classes_batch: np.ndarray, *, min_period: int = 2,
                     max_period: Optional[int] = None,
                     folded: bool = False,
-                    use_kernel: Optional[bool] = None) -> list:
+                    use_kernel: Optional[bool] = None) -> List[CycleModel]:
     """Fleet-scale cycle recognition: one batched (Pallas MXU-DFT) power
-    spectrum for all jobs, then per-job peak pick + refinement. This is the
-    path the Fig. 10 scalability benchmark exercises — the per-job python
-    dispatch of calling ``fit_cycle`` in a loop dominates beyond ~100 jobs.
+    spectrum, one batched peak pick, one batched autocorrelation refinement
+    for all jobs. This is the surveillance-tick hot path (Fig. 10) — the
+    seed's per-job Python dispatch dominated beyond ~100 jobs.
     """
     X = np.asarray(classes_batch, np.float32)
     J, n = X.shape
+    if J == 0:
+        return []
     max_p = min(max_period or n // 2, n // 2)
-    if use_kernel is None:
-        use_kernel = kops.on_tpu()     # interpret-mode DFT is for validation,
-                                       # not CPU throughput
-    if use_kernel and kops.dft_supported(n):
-        P = np.asarray(kops.power_spectrum(X - X.mean(axis=1, keepdims=True)))
-    else:
-        F = np.fft.rfft(X - X.mean(axis=1, keepdims=True), axis=1)
-        P = (F.real ** 2 + F.imag ** 2).astype(np.float32)
-    ks = np.arange(P.shape[1])
-    with np.errstate(divide="ignore"):
-        periods = np.where(ks > 0, n / np.maximum(ks, 1), np.inf)
-    valid = (periods >= min_period) & (periods <= max_p)
-    Pv = np.where(valid[None, :], P, -1.0)
-    Pv[:, 0] = -1.0
-    k_star = np.argmax(Pv, axis=1)
-    conf = P[np.arange(J), k_star] / np.maximum(P[:, 1:].sum(axis=1), 1e-12)
-    out = []
+    if n < 2 * min_period:
+        return [CycleModel(0, 0.0, np.asarray(
+            [1 if X[j].mean() >= 0.5 else 0], np.int8)) for j in range(J)]
+    P = _spectra(X, use_kernel)
+    k_star, conf, found = _peak_pick(P, n, min_period, max_p)
+    p0 = np.round(n / np.maximum(k_star, 1)).astype(np.int64)
+    periods = np.where(found, p0, 1)
+    if found.any():
+        refined = _refine_period_batch(X[found].astype(np.float64),
+                                       p0[found], min_period, max_p)
+        periods = periods.copy()
+        periods[found] = refined
+    out: List[CycleModel] = []
     for j in range(J):
-        if Pv[j, k_star[j]] <= 0:
+        if not found[j]:
             out.append(CycleModel(0, 0.0, np.asarray(
                 [1 if X[j].mean() >= 0.5 else 0], np.int8)))
             continue
-        p0 = int(round(n / k_star[j]))
-        period = _refine_period(X[j].astype(np.float64), p0, min_period,
-                                max_p)
+        period = int(periods[j])
         cls = np.asarray(classes_batch[j], np.int8)
         array_lm, array_nlm, profile = decompose(cls, period)
         if folded:
@@ -171,17 +228,12 @@ def fit_cycle_batch(classes_batch: np.ndarray, *, min_period: int = 2,
 
 def fit_cycle(classes: np.ndarray, *, min_period: int = 2,
               max_period: Optional[int] = None, folded: bool = False,
-              use_kernel: bool = True) -> CycleModel:
-    """Characterized series -> CycleModel (the paper pipeline in one call)."""
-    period, conf = cycle_length(classes.astype(np.float32),
-                                min_period=min_period, max_period=max_period,
-                                use_kernel=use_kernel)
-    if period <= 1:
-        profile = np.asarray([1 if np.mean(classes) >= 0.5 else 0], np.int8)
-        return CycleModel(0, conf, profile)
-    array_lm, array_nlm, profile = decompose(classes, period)
-    if folded:
-        profile = fold_profile(classes, period)
-        idx = np.arange(period)
-        array_lm, array_nlm = idx[profile == 1], idx[profile != 1]
-    return CycleModel(period, conf, profile, array_lm, array_nlm)
+              use_kernel: Optional[bool] = None) -> CycleModel:
+    """Characterized series -> CycleModel (the paper pipeline in one call).
+
+    A J=1 view of ``fit_cycle_batch`` — scalar/batch parity is structural,
+    not coincidental.
+    """
+    return fit_cycle_batch(np.asarray(classes)[None], min_period=min_period,
+                           max_period=max_period, folded=folded,
+                           use_kernel=use_kernel)[0]

@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import characterize, strunk
 from repro.core.orchestrator import LMCM, MigrationRequest
-from repro.core.telemetry import TelemetryBuffer
+from repro.core.telemetry import FleetTelemetry, TelemetryBuffer
 
 # phase archetypes: load-index means (step_time, dirty_bytes, dirty_fraction,
 # collective_bytes, compute_util, hbm_util) + dirty rate in bytes/s.
@@ -118,7 +118,13 @@ class SimResult:
 
 
 class FleetSim:
-    """Time-stepped simulation: telemetry sampling + LMCM ticks + migrations."""
+    """Time-stepped simulation: telemetry sampling + LMCM ticks + migrations.
+
+    Telemetry is backed by one fleet-wide SoA ring buffer (``FleetTelemetry``)
+    — one (J, F) record per step, one gather per surveillance tick — and the
+    LMCM's batched surveillance engine refreshes every stale cycle fit in a
+    single pipeline per step (see ``core/surveillance.py``).
+    """
 
     def __init__(self, jobs: Sequence[SimJob], *, policy: str,
                  bandwidth: float = PAPER_BANDWIDTH, sample_period: float = 1.0,
@@ -132,6 +138,18 @@ class FleetSim:
         self.bandwidth = bandwidth
         self.dt = sample_period
         self.now = 0.0
+        # adopt jobs constructed with a default (empty) buffer into the
+        # fleet SoA store; pre-filled custom buffers are kept as-is
+        self.telemetry = FleetTelemetry(len(jobs), capacity=16384)
+        self._job_list = list(jobs)
+        for idx, j in enumerate(self._job_list):
+            if (len(j.telemetry) == 0
+                    and tuple(j.telemetry.fields) == self.telemetry.fields):
+                j.telemetry = self.telemetry.view(idx)
+        self._soa_record = all(
+            getattr(j.telemetry, "fleet", None) is self.telemetry
+            and j.telemetry.index == i
+            for i, j in enumerate(self._job_list))
         nb = make_training_nb()
         for j in jobs:
             # surveillance window: >=4 observed cycles, else the FFT cannot
@@ -143,12 +161,25 @@ class FleetSim:
         if warmup_s:
             self.run_idle(warmup_s)
 
+    def _record_all(self) -> None:
+        """One telemetry sample per job — a single (J, F) SoA append when
+        every job lives in the fleet store."""
+        step = int(self.now / self.dt)
+        if self._soa_record:
+            vals = np.empty((len(self._job_list), len(self.telemetry.fields)))
+            for i, j in enumerate(self._job_list):
+                s = j.trace.sample_indexes(self.now, self.rng)
+                vals[i] = [s[f] for f in self.telemetry.fields]
+            self.telemetry.record_fleet(step, vals)
+        else:
+            for j in self._job_list:
+                j.telemetry.record(step,
+                                   **j.trace.sample_indexes(self.now, self.rng))
+
     def run_idle(self, seconds: float) -> None:
         steps = int(seconds / self.dt)
         for _ in range(steps):
-            for j in self.jobs.values():
-                j.telemetry.record(int(self.now / self.dt),
-                                   **j.trace.sample_indexes(self.now, self.rng))
+            self._record_all()
             self.now += self.dt
 
     def run_with_plan(self, plan: Sequence[MigrationRequest],
@@ -162,9 +193,8 @@ class FleetSim:
                                     or self.lmcm.running):
             while pending and pending[0].created_at <= self.now:
                 self.lmcm.submit(pending.pop(0), self.now)
-            for j in self.jobs.values():
-                j.telemetry.record(int(self.now / self.dt),
-                                   **j.trace.sample_indexes(self.now, self.rng))
+            self._record_all()
+            self.lmcm.tick(self.now)           # batched fleet surveillance
             for req in self.lmcm.due(self.now):
                 job = self.jobs[req.job_id]
                 outcome = strunk.simulate_precopy(

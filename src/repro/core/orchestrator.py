@@ -21,19 +21,24 @@ not starve migrations), ``max_concurrent`` rate-limits simultaneous
 migrations. Customer knob: ``deadline`` — if the workload is expected to end
 before the migration pays off, the request is cancelled.
 
-Scalability: the per-tick classification + cycle fit is O(window) per job and
-the fleet postpone is one vectorized jit call (Fig. 10 benchmark drives this
-with 1,000 jobs).
+Scalability: all per-job surveillance (window gather -> NB classification ->
+FFT cycle fit -> Algorithm 2) is delegated to the fleet-wide batched engine
+in ``core/surveillance.py`` — ONE tick computes every stale job's cycle fit
+(staleness epochs: a fit is reused until the window advances period/4
+samples) and answers Algorithm 2 for the whole fleet in one vectorized jit
+call. ``decide`` reads the engine's cached models; the Fig. 10 benchmark
+drives ``SurveillanceEngine.tick`` directly at 10k+ jobs.
 """
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core import characterize, cycles, postpone as pp, strunk
+from repro.core.surveillance import SurveillanceEngine, SurveilledJob
 from repro.core.telemetry import TelemetryBuffer
 
 
@@ -51,31 +56,20 @@ class MigrationRequest:
     outcome: Optional[strunk.MigrationOutcome] = None
 
 
-@dataclass
-class JobEntry:
-    job_id: str
-    telemetry: TelemetryBuffer
-    nb: characterize.NaiveBayes
-    window: int = 512
-    model: Optional[cycles.CycleModel] = None
-    lm_series: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int8))
-    dirty_rate_fn: Optional[Callable[[float], float]] = None
-    # step index of the first sample in the characterized window: Alg.1's
-    # profile is indexed from here, so Alg.2's M_current must be too
-    origin_step: int = 0
-
-
 class LMCM:
     def __init__(self, *, policy: str = "alma-paper", max_wait: float = 1e4,
                  max_concurrent: int = 2, bandwidth: float = 50e9,
-                 sample_period: float = 1.0):
+                 sample_period: float = 1.0,
+                 surveillance: Optional[SurveillanceEngine] = None):
         assert policy in ("immediate", "alma-paper", "alma-plus")
         self.policy = policy
         self.max_wait = max_wait
         self.max_concurrent = max_concurrent
         self.bandwidth = bandwidth
         self.sample_period = sample_period     # seconds per telemetry sample
-        self.jobs: Dict[str, JobEntry] = {}
+        self.engine = surveillance or SurveillanceEngine(
+            folded=(policy == "alma-plus"))
+        self.jobs: Dict[str, SurveilledJob] = self.engine.jobs
         self.queue: List = []                  # heap of (fire_time, seq, req)
         self._seq = 0
         self.running: List[MigrationRequest] = []
@@ -85,21 +79,21 @@ class LMCM:
     def register_job(self, job_id: str, telemetry: TelemetryBuffer,
                      nb: characterize.NaiveBayes, *, window: int = 512,
                      dirty_rate_fn=None) -> None:
-        self.jobs[job_id] = JobEntry(job_id, telemetry, nb, window=window,
-                                     dirty_rate_fn=dirty_rate_fn)
+        self.engine.register(job_id, telemetry, nb, window=window,
+                             dirty_rate_fn=dirty_rate_fn)
 
     # -- characterization + cycle fit (paper §4) ------------------------------
     def refresh_job(self, job_id: str) -> Optional[cycles.CycleModel]:
-        job = self.jobs[job_id]
-        w = job.telemetry.window(job.window)
-        if len(w) < 8:
-            return None
-        _, lm, _ = characterize.classify_series(job.nb, w)
-        job.lm_series = lm
-        job.origin_step = job.telemetry.latest_step() - len(w) + 1
-        job.model = cycles.fit_cycle(
-            lm, folded=(self.policy == "alma-plus"))
-        return job.model
+        """Current cycle model of one job — recomputed by the surveillance
+        engine only when the job's staleness epoch has lapsed."""
+        return self.engine.refresh_model(job_id)
+
+    def tick(self, now: float = 0.0) -> int:
+        """One fleet surveillance pass (batched; see SurveillanceEngine).
+        Staleness is tracked by telemetry step counts, not wall time, so
+        ``now`` is accepted only for sim-loop symmetry. Returns the number
+        of jobs whose cycle fit was recomputed."""
+        return self.engine.refresh()
 
     # -- the decision (paper §5.2 + Fig. 5c) ----------------------------------
     def decide(self, req: MigrationRequest, now: float) -> float:
@@ -127,7 +121,7 @@ class LMCM:
                 return -1.0
         return wait
 
-    def _best_window_wait(self, job: JobEntry, model: cycles.CycleModel,
+    def _best_window_wait(self, job: SurveilledJob, model: cycles.CycleModel,
                           req: MigrationRequest, now: float) -> float:
         """'alma-plus': scan candidate start moments across one full cycle
         (bounded by max_wait) and pick the minimum-Strunk-cost start."""

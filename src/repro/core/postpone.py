@@ -58,11 +58,19 @@ def postpone_batch(profiles: jnp.ndarray, periods: jnp.ndarray,
 postpone_batch_jit = jax.jit(postpone_batch)
 
 
-def pack_fleet(models) -> tuple:
-    """CycleModels -> padded arrays for ``postpone_batch``."""
-    p_max = max((m.period for m in models if m.period > 1), default=1)
-    profiles = np.full((len(models), max(p_max, 1)), -1, np.int8)
-    periods = np.zeros(len(models), np.int32)
+def pack_fleet(models, *, n_jobs=None, p_max=None) -> tuple:
+    """CycleModels -> padded arrays for ``postpone_batch``.
+
+    ``n_jobs``/``p_max`` optionally pad the job/period axes beyond the
+    fleet's own extent (the surveillance engine buckets both to powers of
+    two so the jit cache stays bounded); padding rows have period 0 and
+    all-(-1) profiles, which ``postpone_batch`` maps to RemainTime 0.
+    """
+    p_req = max((m.period for m in models if m.period > 1), default=1)
+    p_max = max(p_max or 1, p_req, 1)
+    n_jobs = max(n_jobs or len(models), len(models))
+    profiles = np.full((n_jobs, p_max), -1, np.int8)
+    periods = np.zeros(n_jobs, np.int32)
     for j, m in enumerate(models):
         periods[j] = m.period
         if m.period > 1:

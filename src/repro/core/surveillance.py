@@ -1,0 +1,225 @@
+"""Fleet surveillance engine — one batched tick for the whole LMCM fleet.
+
+The paper's LMCM (§5) surveils every VM continuously: classify the latest
+telemetry window (NB, §4.1), recognize the workload cycle (FFT, §4.2 +
+Alg. 1), and answer migration requests with Alg. 2 postponements. The seed
+ran that pipeline one job at a time from ``LMCM.refresh_job`` — a Python
+dispatch per job whose cost capped Fig. 10 scalability near 1k jobs at a
+1 s sampling period. This module replaces the per-job loop with ONE batched
+computation over the registered fleet:
+
+  1. gather     — every job's telemetry window in one SoA ``window_matrix``
+                  call (``telemetry.FleetTelemetry`` fast path; generic
+                  per-buffer fallback for foreign stores);
+  2. classify   — one jitted Naive Bayes call over (J, T, F)
+                  (``characterize.classify_series_batch``); classification
+                  is *incremental*: NB is stateless per sample, so a slid
+                  window only classifies its new tail and splices the
+                  cached lm series for the overlap (telemetry steps are
+                  assumed dense — one sample per step);
+  3. recognize  — one batched power spectrum (Pallas MXU matmul-DFT with a
+                  fused mean-removal prologue on TPU) + one vectorized
+                  candidate-lag autocorrelation refinement
+                  (``cycles.fit_cycle_batch`` / ``kernels/autocorr.py``);
+  4. decide     — the already-vectorized Algorithm 2 applied fleet-wide
+                  (``postpone.postpone_batch``).
+
+Staleness epochs make the tick incremental: a job's cycle fit is only
+recomputed once its window has advanced >= period/4 samples since the last
+fit (``acyclic_refit`` samples while no cycle is known), so a steady-state
+tick touches only the jobs whose phase estimate could actually have
+drifted. ``LMCM`` consumes the engine for both its per-request decisions
+and its per-step surveillance; ``FleetSim`` and
+``benchmarks/fig10_scalability.py`` drive ``tick`` directly.
+
+Batch shapes are bucketed to powers of two before entering jitted code so
+a fleet whose stale subset fluctuates does not retrace XLA programs every
+tick.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import characterize, cycles, postpone as pp
+from repro.core.telemetry import TelemetryBuffer
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
+@dataclass
+class SurveilledJob:
+    """Per-job surveillance state (the LMCM's job registry entry)."""
+    job_id: str
+    telemetry: TelemetryBuffer          # or any buffer with its interface
+    nb: characterize.NaiveBayes
+    window: int = 512
+    dirty_rate_fn: Optional[Callable[[float], float]] = None
+    model: Optional[cycles.CycleModel] = None
+    lm_series: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int8))
+    # step index of the first sample in the characterized window: Alg.1's
+    # profile is indexed from here, so Alg.2's M_current must be too
+    origin_step: int = 0
+    fitted_step: int = -1               # latest step at last fit (-1 = never)
+
+
+@dataclass
+class TickResult:
+    remain: Dict[str, int]              # job -> Alg.2 RemainTime (samples)
+    refitted: int                       # jobs whose cycle fit was recomputed
+    fleet: int                          # jobs with a current cycle model
+
+
+class SurveillanceEngine:
+    """Batched NB -> FFT -> Alg.2 surveillance over a registered fleet."""
+
+    def __init__(self, *, folded: bool = False, min_samples: int = 8,
+                 acyclic_refit: int = 8,
+                 use_kernel: Optional[bool] = None):
+        self.folded = folded
+        self.min_samples = min_samples
+        self.acyclic_refit = acyclic_refit
+        self.use_kernel = use_kernel
+        self.jobs: Dict[str, SurveilledJob] = {}
+
+    # -- registration -------------------------------------------------------
+    def register(self, job_id: str, telemetry, nb: characterize.NaiveBayes,
+                 *, window: int = 512, dirty_rate_fn=None) -> SurveilledJob:
+        job = SurveilledJob(job_id, telemetry, nb, window=window,
+                            dirty_rate_fn=dirty_rate_fn)
+        self.jobs[job_id] = job
+        return job
+
+    def unregister(self, job_id: str) -> None:
+        self.jobs.pop(job_id, None)
+
+    # -- staleness epochs ---------------------------------------------------
+    def _latest_steps(self, jobs: List[SurveilledJob]) -> np.ndarray:
+        """(J,) latest telemetry step per job; one call on the fleet-SoA
+        fast path, per-buffer otherwise."""
+        out = np.full(len(jobs), -1, np.int64)
+        by_fleet: Dict[int, List[int]] = {}
+        for i, job in enumerate(jobs):
+            fleet = getattr(job.telemetry, "fleet", None)
+            if fleet is not None:
+                by_fleet.setdefault(id(fleet), []).append(i)
+            else:
+                out[i] = job.telemetry.latest_step()
+        for idxs in by_fleet.values():
+            fleet = jobs[idxs[0]].telemetry.fleet
+            latest = fleet.latest_steps()
+            for i in idxs:
+                out[i] = latest[jobs[i].telemetry.index]
+        return out
+
+    def _stale(self, job: SurveilledJob, latest: int) -> bool:
+        if latest < 0 or len(job.telemetry) < self.min_samples:
+            return False                        # not enough history yet
+        if job.fitted_step < 0:
+            return True
+        advanced = latest - job.fitted_step
+        if job.model is not None and job.model.period > 1:
+            return advanced >= max(1, job.model.period // 4)
+        return advanced >= self.acyclic_refit
+
+    # -- the batched pipeline ----------------------------------------------
+    def refresh(self, job_ids: Optional[List[str]] = None,
+                *, force: bool = False) -> int:
+        """Recompute the cycle fit of every stale (or ``force``d) job in
+        one batched pipeline per (classifier, window-length) group.
+        Returns the number of jobs refit."""
+        jobs = ([self.jobs[i] for i in job_ids] if job_ids is not None
+                else list(self.jobs.values()))
+        if not jobs:
+            return 0
+        latest = self._latest_steps(jobs)
+        todo = [(job, ls) for job, ls in zip(jobs, latest)
+                if (force and ls >= 0
+                    and len(job.telemetry) >= self.min_samples)
+                or (not force and self._stale(job, ls))]
+        if not todo:
+            return 0
+        groups: Dict[tuple, List[tuple]] = {}
+        for job, ls in todo:
+            m = min(job.window, len(job.telemetry))
+            delta = int(ls) - job.fitted_step
+            # incremental classification: NB is stateless per sample, so a
+            # slid window only needs its NEW tail classified — the cached
+            # lm_series supplies the overlap (telemetry steps are assumed
+            # dense, one sample per step, as the recorder produces them)
+            splice = (job.fitted_step >= 0 and len(job.lm_series) == m
+                      and 0 <= delta < m)
+            tail = min(m, _pow2(max(delta, 1))) if splice else m
+            groups.setdefault((id(job.nb), m, tail), []).append((job, ls))
+        for (_, m, tail), entries in groups.items():
+            self._refresh_group([j for j, _ in entries],
+                                np.asarray([ls for _, ls in entries]),
+                                m, tail)
+        return len(todo)
+
+    def _refresh_group(self, jobs: List[SurveilledJob],
+                       latest: np.ndarray, m: int, tail: int) -> None:
+        G = len(jobs)
+        W, _ = TelemetryBuffer.window_matrix(
+            [j.telemetry for j in jobs], tail)              # (G, tail, F)
+        # bucket BOTH batch axes so the jitted NB doesn't retrace per stale
+        # subset (job axis) or per history length (time axis — zero rows at
+        # the front classify to garbage and are sliced off; NB is per-sample)
+        G_p, T_p = _pow2(G), _pow2(tail)
+        if G_p != G or T_p != tail:
+            Wp = np.zeros((G_p, T_p, W.shape[2]))
+            Wp[:G, T_p - tail:] = W
+            W = Wp
+        _, lm_tail, _ = characterize.classify_series_batch(jobs[0].nb, W)
+        lm_tail = lm_tail[:G, T_p - tail:]
+        if tail == m:
+            LM = lm_tail
+        else:
+            LM = np.empty((G, m), np.int8)
+            for i, (job, ls) in enumerate(zip(jobs, latest)):
+                d = int(ls) - job.fitted_step
+                LM[i, : m - d] = job.lm_series[d:]
+                if d:
+                    LM[i, m - d:] = lm_tail[i, tail - d:]
+        models = cycles.fit_cycle_batch(LM, folded=self.folded,
+                                        use_kernel=self.use_kernel)
+        for job, model, lm_row, ls in zip(jobs, models, LM, latest):
+            job.model = model
+            job.lm_series = lm_row
+            job.origin_step = int(ls) - m + 1
+            job.fitted_step = int(ls)
+
+    def refresh_model(self, job_id: str, *, force: bool = False
+                      ) -> Optional[cycles.CycleModel]:
+        """Single-job view of ``refresh``: recompute if stale, then return
+        the (possibly cached) model. None while history is too short."""
+        self.refresh([job_id], force=force)
+        return self.jobs[job_id].model
+
+    # -- the batched tick ---------------------------------------------------
+    def tick(self, now_step: int) -> TickResult:
+        """One fleet surveillance tick: refresh every stale cycle fit, then
+        answer Algorithm 2 for the whole fleet in one vectorized call."""
+        refitted = self.refresh()
+        fitted = [j for j in self.jobs.values() if j.model is not None]
+        if not fitted:
+            return TickResult({}, refitted, 0)
+        p_max = max((j.model.period for j in fitted if j.model.period > 1),
+                    default=1)
+        # bucket both axes: jit cache stays O(log J * log P)
+        J_p, P_p = _pow2(len(fitted)), _pow2(max(p_max, 1))
+        profiles, periods = pp.pack_fleet([j.model for j in fitted],
+                                          n_jobs=J_p, p_max=P_p)
+        m_now = np.zeros(J_p, np.int32)
+        for i, job in enumerate(fitted):
+            m_now[i] = now_step - job.origin_step
+        import jax.numpy as jnp
+        remain = np.asarray(pp.postpone_batch_jit(
+            profiles, periods, jnp.asarray(m_now)))[: len(fitted)]
+        return TickResult(
+            {job.job_id: int(r) for job, r in zip(fitted, remain)},
+            refitted, len(fitted))

@@ -6,11 +6,20 @@ records one sample per step with exact in-process load indexes (no semantic
 gap): dirty-bytes of the last update, collective bytes, step time, tokens/s.
 The LMCM reads fixed-length windows for characterization. Gathering overhead
 is measured in ``benchmarks/fig11_gathering.py``.
+
+Fleet scale: ``FleetTelemetry`` keeps the whole fleet's samples in one
+structure-of-arrays ring buffer — (J, capacity, F) — so the surveillance
+engine (``core/surveillance.py``) gathers every job's window in a single
+vectorized ``window_matrix`` call instead of J per-buffer copies, and the
+simulator records one (J, F) row per step instead of J dict-kwarg calls.
+Per-job ``view(j)`` adapters expose the ``TelemetryBuffer`` read/record
+surface, so existing consumers (LMCM registration, examples) are agnostic
+to which backing store a job uses.
 """
 from __future__ import annotations
 
 import threading
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,7 +64,6 @@ class TelemetryBuffer:
             m = min(n, len(self))
             if m == 0:
                 return np.zeros((0, len(self.fields)))
-            end = self._n % self.capacity
             idx = (np.arange(self._n - m, self._n)) % self.capacity
             return self._data[idx].copy()
 
@@ -66,3 +74,161 @@ class TelemetryBuffer:
     def snapshot(self) -> Dict[str, np.ndarray]:
         w = self.window(len(self))
         return {f: w[:, j] for j, f in enumerate(self.fields)}
+
+    @staticmethod
+    def window_matrix(buffers: Sequence["TelemetryBuffer"], n: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Gather the most recent ``n`` samples of many buffers into one
+        (J, n, F) SoA batch in a single call.
+
+        Buffers backed by the same ``FleetTelemetry`` are gathered with one
+        vectorized fancy-index; foreign buffers fall back to per-buffer
+        ``window`` copies into the preallocated output. Short histories are
+        left zero at the front; the second return value holds each job's
+        valid sample count (callers batch jobs with equal counts).
+        """
+        J = len(buffers)
+        F = len(buffers[0].fields) if J else 0
+        out = np.zeros((J, n, F), np.float64)
+        lengths = np.zeros(J, np.int64)
+        # fleet fast path: group contiguous views of a shared SoA store
+        by_fleet: Dict[int, List[int]] = {}
+        for j, b in enumerate(buffers):
+            fleet = getattr(b, "fleet", None)
+            if fleet is not None and tuple(b.fields) == (
+                    tuple(buffers[0].fields)):
+                by_fleet.setdefault(id(fleet), []).append(j)
+        done = np.zeros(J, bool)
+        for js in by_fleet.values():
+            fleet = buffers[js[0]].fleet
+            rows = np.asarray([buffers[j].index for j in js])
+            w, m = fleet.window_matrix(n, rows=rows)
+            out[js] = w
+            lengths[js] = m
+            done[js] = True
+        for j, b in enumerate(buffers):
+            if done[j]:
+                continue
+            w = b.window(n)
+            lengths[j] = len(w)
+            if len(w):
+                out[j, n - len(w):] = w
+        return out, lengths
+
+
+class FleetJobView:
+    """One job's ``TelemetryBuffer``-compatible view into a FleetTelemetry
+    SoA store (read surface + per-step ``record``)."""
+
+    def __init__(self, fleet: "FleetTelemetry", index: int):
+        self.fleet = fleet
+        self.index = index
+        self.fields = fleet.fields
+        self.capacity = fleet.capacity
+
+    def __len__(self) -> int:
+        return int(min(self.fleet._n[self.index], self.capacity))
+
+    def record(self, step: int, **indexes: float) -> None:
+        self.fleet.record_job(self.index, step, **indexes)
+
+    def latest_step(self) -> int:
+        return self.fleet.latest_step(self.index)
+
+    def window(self, n: int) -> np.ndarray:
+        w, m = self.fleet.window_matrix(n, rows=np.asarray([self.index]))
+        return w[0, n - int(m[0]):]
+
+    def series(self, field: str, n: Optional[int] = None) -> np.ndarray:
+        j = self.fields.index(field)
+        return self.window(n if n is not None else len(self))[:, j]
+
+    def snapshot(self) -> Dict[str, np.ndarray]:
+        w = self.window(len(self))
+        return {f: w[:, j] for j, f in enumerate(self.fields)}
+
+
+class FleetTelemetry:
+    """Fleet-wide structure-of-arrays telemetry ring buffer.
+
+    One (J, capacity, F) array holds every job's samples; ``record_fleet``
+    appends one (J, F) row per step for the whole fleet and
+    ``window_matrix`` gathers all windows with one fancy-index — the O(J)
+    Python dispatch of per-job ring buffers disappears from both the record
+    and the surveillance-gather path. Jobs may also record independently
+    (``record_job`` / per-job views); counts are tracked per job.
+    """
+
+    def __init__(self, n_jobs: int, capacity: int = 8192,
+                 fields: Sequence[str] = DEFAULT_FIELDS):
+        self.fields = tuple(fields)
+        self.capacity = capacity
+        self.n_jobs = n_jobs
+        self._data = np.zeros((n_jobs, capacity, len(self.fields)),
+                              np.float64)
+        self._steps = np.full((n_jobs, capacity), -1, np.int64)
+        self._n = np.zeros(n_jobs, np.int64)
+        self._lock = threading.Lock()
+
+    def view(self, index: int) -> FleetJobView:
+        return FleetJobView(self, index)
+
+    def views(self) -> List[FleetJobView]:
+        return [FleetJobView(self, j) for j in range(self.n_jobs)]
+
+    def record_fleet(self, step: int, values: np.ndarray) -> None:
+        """Append one sample row per job. values: (J, F) ordered like
+        ``fields``."""
+        values = np.asarray(values, np.float64)
+        with self._lock:
+            i = self._n % self.capacity                     # (J,)
+            rows = np.arange(self.n_jobs)
+            self._data[rows, i] = values
+            self._steps[rows, i] = step
+            self._n += 1
+
+    def record_job(self, index: int, step: int, **indexes: float) -> None:
+        with self._lock:
+            i = int(self._n[index] % self.capacity)
+            for j, f in enumerate(self.fields):
+                self._data[index, i, j] = float(indexes.get(f, 0.0))
+            self._steps[index, i] = step
+            self._n[index] += 1
+
+    def latest_step(self, index: int) -> int:
+        with self._lock:
+            if self._n[index] == 0:
+                return -1
+            return int(self._steps[index,
+                                   (self._n[index] - 1) % self.capacity])
+
+    def latest_steps(self) -> np.ndarray:
+        """(J,) latest recorded step per job (-1 when empty) — one call."""
+        with self._lock:
+            rows = np.arange(self.n_jobs)
+            idx = (self._n - 1) % self.capacity
+            out = self._steps[rows, idx].copy()
+            out[self._n == 0] = -1
+            return out
+
+    def window_matrix(self, n: int, rows: Optional[np.ndarray] = None
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Most recent ``n`` samples for ``rows`` (default: all jobs) as one
+        (len(rows), n, F) gather, oldest first, zero-padded at the front.
+        Returns (matrix, per-job valid counts)."""
+        with self._lock:
+            if rows is None:
+                rows = np.arange(self.n_jobs)
+            rows = np.asarray(rows)
+            counts = np.minimum(self._n[rows], self.capacity)
+            m = np.minimum(counts, n)                       # (R,)
+            start = self._n[rows] - m
+            # gather index t in [0, n): maps to ring slot of sample
+            # (start + t - (n - m)); invalid front entries hit slot 0 and
+            # are zeroed after the gather
+            t = np.arange(n)[None, :]
+            rel = t - (n - m)[:, None]
+            idx = (start[:, None] + rel) % self.capacity
+            w = self._data[rows[:, None], idx]
+            w[rel < 0] = 0.0
+            return w, m

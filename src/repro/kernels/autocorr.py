@@ -1,0 +1,91 @@
+"""Batched autocorrelation scoring — the period-refinement hot spot.
+
+FFT bin periods are quantized to N/k; `cycles` de-quantizes them with a
+local lag search maximizing the (mean-removed) autocorrelation. At fleet
+scale the seed ran that search as a scalar Python loop per job — the single
+largest CPU cost of a surveillance tick beyond ~100 jobs. Here the whole
+fleet scores one shared grid of candidate lags in a single Pallas call:
+
+    R[j, l] = sum_t x[j, t] * x[j, t + lag_l]        (t + lag_l < N)
+
+Grid: (job_tiles, lag_tiles). Each kernel instance keeps its block's full
+rows resident in VMEM (bt x N f32, <= 64 KB at N=2048), reads a tile of
+candidate lags from SMEM, and walks them with a fori_loop of dynamic-slice
+multiplies on the zero-extended rows (the zero tail implements the
+``t + lag < N`` mask for free). The products are VPU work — no MXU — but one
+kernel launch replaces J Python-dispatched dot-product loops, and rows are
+streamed once per lag *tile* instead of once per lag.
+
+Callers (``cycles._refine_period_batch``) pick each job's argmax over its
+own valid lag window; invalid/padding lags are masked host-side.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+B_TILE = 8
+L_TILE = 8
+MAX_N = 2048
+
+
+def _kernel(x_ref, lags_ref, out_ref):
+    x = x_ref[...]                                         # (bt, N)
+    xp = jnp.concatenate([x, jnp.zeros_like(x)], axis=1)   # zero tail = mask
+
+    def body(l, acc):
+        p = jnp.clip(lags_ref[l], 0, x.shape[1])
+        sh = jax.lax.dynamic_slice(xp, (0, p), x.shape)    # x[:, p:], padded
+        return acc.at[:, l].set(jnp.sum(x * sh, axis=1))
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, lags_ref.shape[0], body,
+        jnp.zeros(out_ref.shape, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """x: (J, N) f32 mean-removed rows; lags: (L,) int32 shared candidates.
+
+    Returns (J, L) f32 unnormalized autocorrelation scores. Lags outside
+    [0, N) are clamped (callers mask their scores out).
+    """
+    J, N = x.shape
+    L = lags.shape[0]
+    bt = min(B_TILE, J)
+    J_p = -(-J // bt) * bt
+    L_p = -(-L // L_TILE) * L_TILE
+    if J_p != J:
+        x = jnp.pad(x, ((0, J_p - J), (0, 0)))
+    if L_p != L:
+        lags = jnp.pad(lags, (0, L_p - L))
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((J_p, L_p), jnp.float32),
+        grid=(J_p // bt, L_p // L_TILE),
+        in_specs=[
+            pl.BlockSpec((bt, N), lambda ji, li: (ji, 0)),
+            pl.BlockSpec((L_TILE,), lambda ji, li: (li,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bt, L_TILE), lambda ji, li: (ji, li)),
+        interpret=interpret,
+    )(x.astype(jnp.float32), lags.astype(jnp.int32))
+    return out[:J, :L]
+
+
+def autocorr_score_ref(x: np.ndarray, lags: np.ndarray) -> np.ndarray:
+    """Numpy oracle: same contract as ``autocorr_score`` (f64 accumulate)."""
+    x = np.asarray(x, np.float64)
+    J, N = x.shape
+    out = np.zeros((J, len(lags)), np.float64)
+    for li, p in enumerate(np.clip(lags, 0, N)):
+        if p < N:
+            out[:, li] = np.einsum("jt,jt->j", x[:, : N - p], x[:, p:])
+    return out.astype(np.float32)

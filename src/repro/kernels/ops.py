@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autocorr as _ac
 from repro.kernels import dirty_delta as _dd
 from repro.kernels import dft as _dft
 from repro.kernels import flash_attention as _fa
@@ -51,14 +52,37 @@ def dft_supported(n: int) -> bool:
     return n % _dft.T_TILE == 0 and 0 < n <= _dft.MAX_N
 
 
-def power_spectrum(x: jnp.ndarray) -> jnp.ndarray:
-    """x: (B, N) -> (B, N//2+1) one-sided power spectrum."""
+def power_spectrum(x: jnp.ndarray, *, center: bool = False) -> jnp.ndarray:
+    """x: (B, N) -> (B, N//2+1) one-sided power spectrum.
+
+    ``center=True`` fuses per-row mean removal into the kernel prologue
+    (no host-side ``x - x.mean()`` copy).
+    """
     B, N = x.shape
     if dft_supported(N):
-        p = _dft.dft_power(x.astype(jnp.float32), interpret=_interpret())
+        p = _dft.dft_power(x.astype(jnp.float32), center=center,
+                           interpret=_interpret())
     else:
+        if center:
+            x = x - jnp.mean(x, axis=-1, keepdims=True)
         p = ref.dft_power_ref(x)
     return p[:, : N // 2 + 1]
+
+
+# ---------------------------------------------------------------------------
+# autocorrelation scoring (period refinement)
+# ---------------------------------------------------------------------------
+def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray) -> jnp.ndarray:
+    """(J, N) rows x (L,) shared candidate lags -> (J, L) scores.
+
+    Pallas kernel on TPU (and for interpret-mode validation); the numpy
+    oracle is the off-TPU fallback — interpret-mode dispatch is far slower
+    than the f64 einsum on CPU and is excluded from the surveillance hot
+    path (see cycles._refine_period_batch).
+    """
+    if on_tpu() and x.shape[1] <= _ac.MAX_N:
+        return _ac.autocorr_score(x, lags, interpret=False)
+    return jnp.asarray(_ac.autocorr_score_ref(x, lags))
 
 
 # ---------------------------------------------------------------------------

@@ -3,7 +3,7 @@
 tests (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core import characterize, cycles, postpone as pp
 from repro.core.fleetsim import WorkloadTrace, make_training_nb
@@ -62,6 +62,32 @@ def test_decompose_is_algorithm1():
     assert lm.tolist() == [0, 1]
     assert nlm.tolist() == [2, 3, 4]
     assert profile.tolist() == [1, 1, 0, 0, 0]
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_confidence_parity_single_vs_batch(use_kernel):
+    """The same series must get the same (period, confidence) on the scalar
+    and the batched path — one shared spectrum + peak-share normalization
+    (the seed normalized the two paths differently)."""
+    rng = np.random.default_rng(7)
+    rows = []
+    for period in (6, 12, 24, 40):
+        patt = (np.arange(period) < period * 0.6).astype(np.int8)
+        s = np.tile(patt, 128 // period + 1)[:128]
+        flip = rng.random(128) < 0.05               # classifier noise
+        rows.append(np.where(flip, 1 - s, s).astype(np.int8))
+    X = np.stack(rows)
+    batch = cycles.fit_cycle_batch(X, use_kernel=use_kernel)
+    for j, row in enumerate(X):
+        single = cycles.fit_cycle(row, use_kernel=use_kernel)
+        assert single.period == batch[j].period
+        np.testing.assert_array_equal(single.profile_lm, batch[j].profile_lm)
+        np.testing.assert_allclose(single.confidence, batch[j].confidence,
+                                   atol=1e-7)
+        p, conf = cycles.cycle_length(row.astype(np.float32),
+                                      use_kernel=use_kernel)
+        assert p == single.period
+        np.testing.assert_allclose(conf, single.confidence, atol=1e-7)
 
 
 def test_complex_cycle_detected():

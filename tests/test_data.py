@@ -1,6 +1,6 @@
 """Data pipeline: determinism, resumability, shape/domain invariants."""
 import numpy as np
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, st
 
 from repro.configs import get_config
 from repro.data import SyntheticCorpus

@@ -3,7 +3,7 @@ per-token recurrence for any decay pattern (hypothesis), and decode must
 continue a prefill bit-compatibly."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.ref import ssm_scan_ref
 from repro.models import gla

@@ -62,6 +62,54 @@ def test_dft_power_sweep(b, n):
                                rtol=2e-4, atol=2e-2)
 
 
+@pytest.mark.parametrize("b,n", [(3, 128), (5, 512)])
+def test_dft_fused_mean_removal(b, n):
+    """center=True (in-kernel prologue) == host-side x - x.mean()."""
+    x = randn(b, n) + 3.0                      # big DC so the fusion matters
+    got = dft_power(x, center=True)
+    want = dft_power(x - jnp.mean(x, axis=-1, keepdims=True))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-2)
+
+
+def test_dft_weights_quarter_shift_exact():
+    """sin derived from the shared cosine table == direct evaluation."""
+    from repro.kernels.dft import dft_weights
+    for n in (128, 256):
+        cos_w, sin_w = dft_weights(n)
+        t = np.arange(n)[:, None] * np.arange(n)[None, :]
+        ang = 2.0 * np.pi * t / n
+        np.testing.assert_allclose(cos_w, np.cos(ang), atol=1e-6)
+        np.testing.assert_allclose(sin_w, np.sin(ang), atol=1e-6)
+
+
+def test_dft_weight_cache_capped():
+    """Regression: the weight cache must stay bounded (the seed pinned up
+    to 8 pairs of N x N f32 matrices — 268 MB at N=2048)."""
+    from repro.kernels.dft import (MAX_N, _TABLE_CACHE_MAX, dft_cache_nbytes,
+                                   dft_weights)
+    for n in (128, 256, 512, 1024, 2048, 512, 128):
+        dft_weights(n)
+    # capacity entries of (int16 phase matrix + f32 table) at worst-case N
+    bound = _TABLE_CACHE_MAX * (2 * MAX_N * MAX_N + 4 * MAX_N)
+    assert dft_cache_nbytes() <= bound
+    assert dft_cache_nbytes() < 268e6 / 10
+
+
+# ---------------------------------------------------------------------------
+# autocorr (period refinement)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("j,n,nl", [(1, 128, 3), (7, 256, 8), (12, 512, 17)])
+def test_autocorr_score_sweep(j, n, nl):
+    from repro.kernels.autocorr import autocorr_score, autocorr_score_ref
+    x = randn(j, n)
+    x = x - jnp.mean(x, axis=1, keepdims=True)
+    lags = jnp.asarray(RNG.integers(0, n + 10, nl), jnp.int32)
+    got = autocorr_score(x, lags)
+    want = autocorr_score_ref(np.asarray(x), np.asarray(lags))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-3)
+
+
 def test_dft_finds_planted_period():
     n = 512
     t = np.arange(n)
