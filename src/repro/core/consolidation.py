@@ -3,8 +3,14 @@ migration plans ALMA intercepts.
 
 First-fit-decreasing heuristic (the paper notes heuristics dominate in
 practice for scalability): given per-job loads and host capacities, pack jobs
-onto the fewest hosts; every job that must move becomes a MigrationRequest.
-ALMA does not modify this policy — it only re-times its requests (Fig. 2/5c).
+onto the fewest hosts; every job that must move becomes a MigrationRequest
+tagged with its src/dst hosts, which the migration plane resolves to network
+links. ALMA does not modify this policy — it only re-times its requests
+(Fig. 2/5c).
+
+``Placement.host_of`` is on the per-request path of every consolidation
+event; it is backed by a job->host index maintained by ``assign``/``move``
+(the FFD packer places through ``assign``), not a linear scan over hosts.
 """
 from __future__ import annotations
 
@@ -32,12 +38,29 @@ class Host:
 @dataclass
 class Placement:
     hosts: Dict[str, Host]
+    _index: Dict[str, str] = field(default_factory=dict, repr=False,
+                                   compare=False)
+
+    def __post_init__(self):
+        self._index = {j: h.host_id for h in self.hosts.values()
+                       for j in h.jobs}
 
     def host_of(self, job_id: str) -> Optional[str]:
-        for h in self.hosts.values():
-            if job_id in h.jobs:
-                return h.host_id
-        return None
+        return self._index.get(job_id)
+
+    def assign(self, job_id: str, host_id: str, load: float) -> None:
+        """Place a job on a host, keeping the job->host index in sync."""
+        self.hosts[host_id].jobs[job_id] = load
+        self._index[job_id] = host_id
+
+    def move(self, job_id: str, dst: str) -> None:
+        """Apply a completed migration: relocate the job to ``dst``."""
+        src = self._index.get(job_id)
+        if src is None or src == dst:
+            return
+        load = self.hosts[src].jobs.pop(job_id)
+        self.hosts[dst].jobs[job_id] = load
+        self._index[job_id] = dst
 
 
 def consolidate_ffd(placement: Placement, *, now: float = 0.0,
@@ -47,7 +70,8 @@ def consolidate_ffd(placement: Placement, *, now: float = 0.0,
 
     Target hosts are the most-loaded first (consolidate into few), jobs are
     placed largest-first; a job that lands on a different host than it
-    occupies now yields a MigrationRequest.
+    occupies now yields a MigrationRequest carrying src/dst for the plane's
+    link resolution.
     """
     jobs: List[Tuple[str, float, str]] = []
     for h in placement.hosts.values():
@@ -56,14 +80,14 @@ def consolidate_ffd(placement: Placement, *, now: float = 0.0,
     jobs.sort(key=lambda t: -t[1])
 
     order = sorted(placement.hosts.values(), key=lambda h: -h.load)
-    new_hosts = {h.host_id: Host(h.host_id, h.capacity) for h in order}
+    new_p = Placement({h.host_id: Host(h.host_id, h.capacity) for h in order})
     plan: List[MigrationRequest] = []
     state_bytes = state_bytes or {}
 
     for job_id, load, src in jobs:
-        for h in new_hosts.values():
+        for h in new_p.hosts.values():
             if h.free >= load:
-                h.jobs[job_id] = load
+                new_p.assign(job_id, h.host_id, load)
                 if h.host_id != src:
                     plan.append(MigrationRequest(
                         job_id=job_id, created_at=now,
@@ -71,9 +95,9 @@ def consolidate_ffd(placement: Placement, *, now: float = 0.0,
                         src=src, dst=h.host_id))
                 break
         else:  # no capacity anywhere: keep in place
-            new_hosts[src].jobs[job_id] = load
+            new_p.assign(job_id, src, load)
 
-    return Placement(new_hosts), plan
+    return new_p, plan
 
 
 def hosts_used(placement: Placement) -> int:

@@ -7,20 +7,34 @@ pre-copy model sampled against the *time-varying* dirty rate, so a migration
 launched in an NLM phase genuinely costs more — which is what Tables 6/7
 measure.
 
+Execution is contention-aware: every migration the LMCM releases is handed
+to the migration plane (``core/plane.py``), which advances all in-flight
+transfers together and re-shares each network link max-min fairly at every
+round boundary (``core/network.py``). Simultaneous migrations therefore
+slow each other down — longer rounds, more dirtying per round, more bytes —
+which is exactly the congestion effect the paper's orchestrator exists to
+avoid. The LMCM's deadline/cost decisions read the plane's realized
+bandwidth through ``bandwidth_probe``.
+
 Workload traces: phase sequences in the style of the paper's Table 3
 artificial cycles (CPU/MEM/IO/IDLE), each phase with characteristic load
 indexes (the NB features) and a dirty rate; plus "application" traces
-recorded from real training runs of this repo's substrate.
+recorded from real training runs of this repo's substrate. Traces carry a
+``PiecewiseRate`` table, so a whole fleet's dirty rates can be sampled in
+one vectorized call (``PiecewiseRate.batch``) — the fast path of
+``strunk.simulate_precopy_batch``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import characterize, strunk
+from repro.core import characterize, network, strunk
+from repro.core.consolidation import Placement
 from repro.core.orchestrator import LMCM, MigrationRequest
+from repro.core.plane import MigrationPlane
 from repro.core.telemetry import FleetTelemetry, TelemetryBuffer
 
 # phase archetypes: load-index means (step_time, dirty_bytes, dirty_fraction,
@@ -43,28 +57,101 @@ PHASES = {
 }
 
 
+class PiecewiseRate:
+    """Piecewise-constant cyclic rate r(t) backed by phase-end tables.
+
+    ``ends`` are cumulative phase end times, ``rates`` the per-phase value;
+    the pattern repeats every ``ends[-1]`` seconds, shifted by ``offset``.
+    Scalar calls and the vectorized ``batch`` path index the same tables
+    with the same float64 arithmetic, so they agree bit-for-bit — the
+    parity contract ``strunk.simulate_precopy_batch`` relies on.
+    """
+
+    def __init__(self, ends: Sequence[float], rates: Sequence[float],
+                 offset: float = 0.0):
+        self.ends = np.asarray(ends, np.float64)
+        self.rates = np.asarray(rates, np.float64)
+        self.cycle = float(self.ends[-1])
+        self.offset = float(offset)
+
+    def index_at(self, t: float) -> int:
+        tc = (t + self.offset) % self.cycle
+        i = int(np.searchsorted(self.ends, tc, side="right"))
+        return min(i, len(self.rates) - 1)
+
+    def __call__(self, t: float) -> float:
+        return float(self.rates[self.index_at(t)])
+
+    @staticmethod
+    def batch(lanes: Sequence["PiecewiseRate"]
+              ) -> Callable[[np.ndarray], np.ndarray]:
+        """One vectorized rate function over (M,) lanes: maps the (M,) time
+        array to (M,) rates in a single padded table lookup."""
+        m = len(lanes)
+        width = max(len(l.rates) for l in lanes)
+        ends = np.full((m, width), np.inf)
+        rates = np.zeros((m, width))
+        for i, l in enumerate(lanes):
+            n = len(l.rates)
+            ends[i, :n] = l.ends
+            rates[i, :n] = l.rates
+            rates[i, n:] = l.rates[-1]
+        cyc = np.asarray([l.cycle for l in lanes])
+        off = np.asarray([l.offset for l in lanes])
+        # flat-table lookup with persistent scratch: per-phase column
+        # compares (W is tiny) + in-place ufuncs beat a (M, W)
+        # broadcast+reduce by ~5x in numpy dispatch overhead — this sits on
+        # the batch simulator's per-round hot path. The returned array is a
+        # reused buffer: callers consume it before the next call.
+        cols = [np.ascontiguousarray(ends[:, k]) for k in range(width)]
+        flat = np.ascontiguousarray(rates.ravel())
+        row_off = np.arange(m, dtype=np.intp) * width
+        tc = np.empty(m)
+        idx = np.empty(m, np.intp)
+        cmp = np.empty(m, bool)
+        out = np.empty(m)
+
+        def fn(t: np.ndarray) -> np.ndarray:
+            np.add(t, off, out=tc)
+            np.mod(tc, cyc, out=tc)
+            np.copyto(idx, row_off)
+            for col in cols[:-1]:       # tc < ends[-1] always
+                np.greater_equal(tc, col, out=cmp)
+                np.add(idx, cmp, out=idx, casting="unsafe")
+            return flat.take(idx, out=out)
+        fn.vectorized = True
+        fn.nonneg = bool(np.all(rates >= 0.0))
+        return fn
+
+
 @dataclass
 class WorkloadTrace:
     """Piecewise-constant phase trace. phases: [(name, duration_s), ...]
-    repeated cyclically for ``total_s`` seconds."""
+    repeated cyclically for ``total_s`` seconds, shifted by ``offset``
+    (replicas of one application de-phased across the fleet)."""
     phases: Sequence[Tuple[str, float]]
     total_s: float
     jitter: float = 0.05
     seed: int = 0
+    offset: float = 0.0
 
     def __post_init__(self):
-        self.cycle_s = sum(d for _, d in self.phases)
+        ends = np.cumsum([d for _, d in self.phases]).astype(np.float64)
+        self.cycle_s = float(ends[-1])
+        self._names = [n for n, _ in self.phases]
+        self._rate = PiecewiseRate(
+            ends, [PHASES[n]["dirty_rate"] for n in self._names],
+            offset=self.offset)
 
     def phase_at(self, t: float) -> str:
-        tc = t % self.cycle_s
-        for name, d in self.phases:
-            if tc < d:
-                return name
-            tc -= d
-        return self.phases[-1][0]
+        return self._names[self._rate.index_at(t)]
 
     def dirty_rate(self, t: float) -> float:
-        return PHASES[self.phase_at(t)]["dirty_rate"]
+        return self._rate(t)
+
+    @property
+    def rate_table(self) -> PiecewiseRate:
+        return self._rate
 
     def sample_indexes(self, t: float, rng: np.random.Generator) -> dict:
         ph = PHASES[self.phase_at(t)]
@@ -115,27 +202,44 @@ class SimResult:
     mean_downtime: float
     per_job: Dict[str, strunk.MigrationOutcome]
     lm_hit_rate: float                 # fraction fired inside a true LM phase
+    makespan: float = 0.0              # first launch -> last completion
+    link_bytes: Dict[str, float] = field(default_factory=dict)
 
 
 class FleetSim:
-    """Time-stepped simulation: telemetry sampling + LMCM ticks + migrations.
+    """Time-stepped simulation: telemetry sampling + LMCM ticks + the
+    contention-aware migration plane.
 
     Telemetry is backed by one fleet-wide SoA ring buffer (``FleetTelemetry``)
     — one (J, F) record per step, one gather per surveillance tick — and the
     LMCM's batched surveillance engine refreshes every stale cycle fit in a
-    single pipeline per step (see ``core/surveillance.py``).
+    single pipeline per step (see ``core/surveillance.py``). Migrations the
+    LMCM releases run on a shared ``MigrationPlane``: each sampling period
+    the plane's event loop advances every in-flight pre-copy together,
+    re-sharing link bandwidth max-min fairly at round boundaries. By default
+    all hosts share one migration link at ``bandwidth`` — the paper's
+    dedicated 1 Gbit/s migration network.
     """
 
     def __init__(self, jobs: Sequence[SimJob], *, policy: str,
                  bandwidth: float = PAPER_BANDWIDTH, sample_period: float = 1.0,
                  max_wait: float = 600.0, max_concurrent: int = 2,
-                 warmup_s: float = 0.0, seed: int = 0):
+                 warmup_s: float = 0.0, seed: int = 0,
+                 topology: Optional[network.Topology] = None,
+                 placement: Optional[Placement] = None,
+                 min_share_frac: float = 0.0):
         self.jobs = {j.job_id: j for j in jobs}
         self.rng = np.random.default_rng(seed)
         self.lmcm = LMCM(policy=policy, max_wait=max_wait,
                          max_concurrent=max_concurrent, bandwidth=bandwidth,
-                         sample_period=sample_period)
+                         sample_period=sample_period,
+                         min_share_frac=min_share_frac)
         self.bandwidth = bandwidth
+        self.topology = topology or network.Topology.single_link(bandwidth)
+        self.placement = placement
+        self.plane = MigrationPlane(self.topology)
+        self.lmcm.bandwidth_probe = lambda req, extra=0: \
+            self.plane.probe_bandwidth(req.src, req.dst, extra)
         self.dt = sample_period
         self.now = 0.0
         # adopt jobs constructed with a default (empty) buffer into the
@@ -182,31 +286,54 @@ class FleetSim:
             self._record_all()
             self.now += self.dt
 
+    def _tag_request(self, req: MigrationRequest) -> None:
+        """Resolve src (via the placement's O(1) job->host index) and the
+        network links the transfer will traverse."""
+        if self.placement is not None and not req.src:
+            req.src = self.placement.host_of(req.job_id) or ""
+        req.path = self.topology.path(req.src, req.dst)
+
     def run_with_plan(self, plan: Sequence[MigrationRequest],
                       horizon_s: float = 3600.0) -> SimResult:
         pending = sorted(plan, key=lambda r: r.created_at)
         per_job: Dict[str, strunk.MigrationOutcome] = {}
         done: List[MigrationRequest] = []
         lm_hits = 0
+        # lm-hit (launched in a non-MEM phase) and launch time, recorded at
+        # release but only counted for migrations that actually complete
+        launch_info: Dict[int, Tuple[bool, float]] = {}
+        first_launch, last_finish = np.inf, 0.0
         t_end = self.now + horizon_s
         while self.now < t_end and (pending or self.lmcm.queue
-                                    or self.lmcm.running):
+                                    or self.lmcm.running
+                                    or self.plane.in_flight):
             while pending and pending[0].created_at <= self.now:
-                self.lmcm.submit(pending.pop(0), self.now)
+                req = pending.pop(0)
+                self._tag_request(req)
+                self.lmcm.submit(req, self.now)
             self._record_all()
             self.lmcm.tick(self.now)           # batched fleet surveillance
             for req in self.lmcm.due(self.now):
                 job = self.jobs[req.job_id]
-                outcome = strunk.simulate_precopy(
-                    req.v_bytes, self.bandwidth, job.trace.dirty_rate,
-                    start_time=self.now)
+                # accuracy metric (Figs. 8-9): did we fire in a non-MEM phase?
+                launch_info[id(req)] = (job.trace.phase_at(self.now) != "MEM",
+                                        self.now)
+                first_launch = min(first_launch, self.now)
+                self.plane.launch(req, job.trace.dirty_rate, self.now,
+                                  path=req.path or None)
+            self.now += self.dt
+            # one sampling period of contended execution: every in-flight
+            # migration advances together, link shares recomputed at events
+            for req, outcome in self.plane.advance(self.now):
                 self.lmcm.finish(req, outcome)
                 per_job[req.job_id] = outcome
                 done.append(req)
-                # accuracy metric (Figs. 8-9): did we fire in a non-MEM phase?
-                if job.trace.phase_at(self.now) != "MEM":
-                    lm_hits += 1
-            self.now += self.dt
+                hit, launched_at = launch_info.pop(id(req))
+                lm_hits += hit
+                last_finish = max(last_finish,
+                                  launched_at + outcome.total_time)
+                if self.placement is not None and req.dst:
+                    self.placement.move(req.job_id, req.dst)
         total_bytes = sum(o.bytes_sent for o in per_job.values())
         times = [o.total_time for o in per_job.values()]
         downs = [o.downtime for o in per_job.values()]
@@ -218,40 +345,66 @@ class FleetSim:
             mean_downtime=float(np.mean(downs)) if downs else 0.0,
             per_job=per_job,
             lm_hit_rate=lm_hits / max(1, len(done)),
+            makespan=(last_finish - first_launch) if done else 0.0,
+            link_bytes=dict(self.plane.link_bytes),
         )
 
 
 # ---------------------------------------------------------------------------
 # the paper's Table 3 artificial cycles + application-like traces
 # ---------------------------------------------------------------------------
-def table3_traces(phase_s: float = 60.0) -> Dict[str, WorkloadTrace]:
-    t = lambda names: WorkloadTrace([(n, phase_s) for n in names],
-                                    total_s=3600)
-    return {
-        "vm03_A": t(["IO", "CPU", "CPU", "IO", "CPU", "CPU", "IO", "CPU",
-                     "CPU"]),
-        "vm02_C": t(["MEM", "IDLE", "CPU", "MEM", "IDLE", "CPU", "MEM",
-                     "IDLE", "CPU"]),
-        "vm02_A": t(["MEM", "CPU", "CPU", "MEM", "CPU", "CPU", "MEM", "CPU",
-                     "CPU", "MEM", "CPU", "CPU"]),
-        "vm01_C": t(["MEM", "IDLE", "CPU", "MEM", "IDLE", "CPU"]),
+def table3_traces(phase_s: float = 60.0, *, replicas: int = 1
+                  ) -> Dict[str, WorkloadTrace]:
+    """The paper's four Table 3 cycles; ``replicas`` > 1 instantiates each
+    cycle multiple times with staggered phase offsets (the contended-fleet
+    scenario: many VMs of the same applications, out of phase)."""
+    def t(names, off):
+        return WorkloadTrace([(n, phase_s) for n in names], total_s=3600,
+                             offset=off)
+    base = {
+        "vm03_A": ["IO", "CPU", "CPU", "IO", "CPU", "CPU", "IO", "CPU",
+                   "CPU"],
+        "vm02_C": ["MEM", "IDLE", "CPU", "MEM", "IDLE", "CPU", "MEM",
+                   "IDLE", "CPU"],
+        "vm02_A": ["MEM", "CPU", "CPU", "MEM", "CPU", "CPU", "MEM", "CPU",
+                   "CPU", "MEM", "CPU", "CPU"],
+        "vm01_C": ["MEM", "IDLE", "CPU", "MEM", "IDLE", "CPU"],
     }
+    if replicas == 1:
+        return {name: t(names, 0.0) for name, names in base.items()}
+    out: Dict[str, WorkloadTrace] = {}
+    for name, names in base.items():
+        cycle = phase_s * len(names)
+        for r in range(replicas):
+            out[f"{name}.{r}"] = t(names, r * cycle / replicas)
+    return out
 
 
-def application_traces(phase_s: float = 45.0) -> Dict[str, WorkloadTrace]:
+def application_traces(phase_s: float = 45.0, *, replicas: int = 1
+                       ) -> Dict[str, WorkloadTrace]:
     """Application analogues (paper §6.3.2): long irregular phases.
     OpenModeller ~ CPU-dominant with IO bursts; BRAMS ~ complex cycle;
-    Hadoop/TeraSort ~ shuffle-heavy (MEM/IO alternation)."""
-    t = lambda spec: WorkloadTrace(spec, total_s=7200)
-    return {
-        "vm03_A_openmodeller": t([("IO", phase_s), ("CPU", 4 * phase_s),
-                                  ("MEM", phase_s), ("CPU", 3 * phase_s)]),
-        "vm02_C_brams": t([("MEM", phase_s), ("CPU", 2 * phase_s),
-                           ("MEM", 2 * phase_s), ("IO", phase_s),
-                           ("CPU", 2 * phase_s), ("IDLE", phase_s)]),
-        "vm01_C_hadoop": t([("IO", phase_s), ("MEM", 2 * phase_s),
-                            ("CPU", phase_s), ("IO", 2 * phase_s)]),
-        "vm02_A_hadoop": t([("MEM", 2 * phase_s), ("IO", phase_s),
-                            ("CPU", phase_s), ("MEM", phase_s),
-                            ("IO", phase_s)]),
+    Hadoop/TeraSort ~ shuffle-heavy (MEM/IO alternation). ``replicas`` > 1
+    de-phases multiple instances of each application (contended fleets)."""
+    base = {
+        "vm03_A_openmodeller": [("IO", phase_s), ("CPU", 4 * phase_s),
+                                ("MEM", phase_s), ("CPU", 3 * phase_s)],
+        "vm02_C_brams": [("MEM", phase_s), ("CPU", 2 * phase_s),
+                         ("MEM", 2 * phase_s), ("IO", phase_s),
+                         ("CPU", 2 * phase_s), ("IDLE", phase_s)],
+        "vm01_C_hadoop": [("IO", phase_s), ("MEM", 2 * phase_s),
+                          ("CPU", phase_s), ("IO", 2 * phase_s)],
+        "vm02_A_hadoop": [("MEM", 2 * phase_s), ("IO", phase_s),
+                          ("CPU", phase_s), ("MEM", phase_s),
+                          ("IO", phase_s)],
     }
+    if replicas == 1:
+        return {n: WorkloadTrace(spec, total_s=7200)
+                for n, spec in base.items()}
+    out: Dict[str, WorkloadTrace] = {}
+    for n, spec in base.items():
+        cycle = sum(d for _, d in spec)
+        for r in range(replicas):
+            out[f"{n}.{r}"] = WorkloadTrace(spec, total_s=7200,
+                                            offset=r * cycle / replicas)
+    return out

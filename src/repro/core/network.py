@@ -1,0 +1,128 @@
+"""Shared-link migration network model — the contention side of the plane.
+
+The paper's testbed moves every live migration over one dedicated 1 Gbit/s
+migration network (§6.1); its central claim is that *simultaneous*
+migrations congest that network and degrade applications (§1, Tables 6-7).
+He & Buyya's taxonomy (arXiv:2112.02593) and Wang et al.'s SDN migration
+planning (arXiv:1412.4980) both single out bandwidth sharing among
+concurrent migrations as the first-order effect an orchestrator must model.
+This module provides that model:
+
+  * ``Topology`` — hosts mapped to the links their migration traffic
+    traverses (a shared migration network, per-host access links, or a
+    star with a core uplink), each link with a fixed capacity in bytes/s.
+  * ``fair_share`` — max-min fair bandwidth allocation across concurrent
+    transfers via progressive filling (water-filling): repeatedly find the
+    most-contended link, freeze every flow crossing it at that link's equal
+    share, and redistribute the slack to the remaining flows.
+
+The migration plane (``core/plane.py``) re-runs ``fair_share`` at every
+round boundary of every in-flight migration, so a migration's bandwidth is
+a function of what else is moving — exactly the coupling the seed's
+fire-and-forget executor ignored (every migration ran at full link speed
+no matter how many were in flight).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Link:
+    link_id: str
+    capacity: float                     # bytes/s
+
+
+class Topology:
+    """Host -> migration-link mapping with per-link capacities.
+
+    ``path(src, dst)`` returns the tuple of link ids a migration from
+    ``src`` to ``dst`` traverses; the plane charges the transfer against
+    every link on the path. Hosts absent from ``host_links`` fall back to
+    ``default_path`` (for the common "one shared migration network" model
+    this means every migration, tagged or not, contends on the same link).
+    """
+
+    def __init__(self, links: Sequence[Link],
+                 host_links: Dict[str, Tuple[str, ...]] | None = None,
+                 default_path: Tuple[str, ...] = ()):
+        self.links: Dict[str, Link] = {l.link_id: l for l in links}
+        self.host_links = dict(host_links or {})
+        self.default_path = tuple(default_path)
+        for h, ls in self.host_links.items():
+            for l in ls:
+                if l not in self.links:
+                    raise KeyError(f"host {h!r} references unknown link {l!r}")
+
+    @property
+    def capacities(self) -> Dict[str, float]:
+        return {i: l.capacity for i, l in self.links.items()}
+
+    def path(self, src: str, dst: str) -> Tuple[str, ...]:
+        """Links traversed by a src->dst migration (order-stable dedup)."""
+        out: List[str] = []
+        for host in (src, dst):
+            for l in self.host_links.get(host, self.default_path):
+                if l not in out:
+                    out.append(l)
+        if not out:
+            out = list(self.default_path)
+        return tuple(out)
+
+    # -- factories -----------------------------------------------------------
+    @classmethod
+    def single_link(cls, capacity: float,
+                    link_id: str = "migration-net") -> "Topology":
+        """The paper's testbed: one shared migration network for everyone."""
+        return cls([Link(link_id, capacity)], default_path=(link_id,))
+
+    @classmethod
+    def star(cls, hosts: Sequence[str], access_capacity: float,
+             core_capacity: float | None = None) -> "Topology":
+        """Per-host access links, optionally through a shared core link."""
+        links = [Link(f"acc:{h}", access_capacity) for h in hosts]
+        host_links = {h: (f"acc:{h}",) for h in hosts}
+        if core_capacity is not None:
+            links.append(Link("core", core_capacity))
+            host_links = {h: (f"acc:{h}", "core") for h in hosts}
+        return cls(links, host_links)
+
+
+def fair_share(paths: Sequence[Sequence[str]],
+               capacities: Dict[str, float]) -> np.ndarray:
+    """Max-min fair rates (bytes/s) for concurrent flows over shared links.
+
+    Progressive filling: every flow's rate grows uniformly until some link
+    saturates; flows crossing the saturated link freeze at that share, the
+    rest keep growing on the slack. A flow with an empty path is
+    unconstrained and gets ``inf`` (the caller decides what that means).
+    """
+    n = len(paths)
+    rates = np.zeros(n)
+    frozen = np.zeros(n, bool)
+    members: Dict[str, List[int]] = {}
+    for i, p in enumerate(paths):
+        for l in dict.fromkeys(p):          # dedup, keep order
+            members.setdefault(l, []).append(i)
+    while True:
+        bottleneck = None
+        for l, idxs in members.items():
+            live = [i for i in idxs if not frozen[i]]
+            if not live:
+                continue
+            rem = capacities[l] - float(rates[idxs].sum())
+            share = max(rem, 0.0) / len(live)
+            if bottleneck is None or share < bottleneck[0]:
+                bottleneck = (share, l)
+        if bottleneck is None:
+            break
+        share, l = bottleneck
+        for i in members[l]:
+            if not frozen[i]:
+                rates[i] = share
+                frozen[i] = True
+    rates[~frozen] = np.inf                 # flows crossing no link
+    return rates

@@ -28,12 +28,21 @@ in ``core/surveillance.py`` — ONE tick computes every stale job's cycle fit
 samples) and answers Algorithm 2 for the whole fleet in one vectorized jit
 call. ``decide`` reads the engine's cached models; the Fig. 10 benchmark
 drives ``SurveillanceEngine.tick`` directly at 10k+ jobs.
+
+Execution feedback: released requests run on the contention-aware
+migration plane (``core/plane.py``), and the plane feeds back through
+``bandwidth_probe`` — the max-min fair share a request would realize right
+now on its src->dst links. The deadline check and the alma-plus cost scan
+judge feasibility at that realized bandwidth instead of the nominal link
+speed, and ``min_share_frac`` lets ``due`` defer launches that would
+dilute every in-flight transfer below a share floor (the
+``max_concurrent`` knob made adaptive to what is actually moving).
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -50,6 +59,8 @@ class MigrationRequest:
     src: str = ""
     dst: str = ""
     deadline: Optional[float] = None    # customer: expected workload end
+    # --- filled by the simulator/plane ---
+    path: Tuple[str, ...] = ()          # network links the transfer traverses
     # --- filled by LMCM ---
     decision: str = "pending"           # pending|scheduled|running|done|cancelled
     scheduled_at: float = 0.0
@@ -60,7 +71,8 @@ class LMCM:
     def __init__(self, *, policy: str = "alma-paper", max_wait: float = 1e4,
                  max_concurrent: int = 2, bandwidth: float = 50e9,
                  sample_period: float = 1.0,
-                 surveillance: Optional[SurveillanceEngine] = None):
+                 surveillance: Optional[SurveillanceEngine] = None,
+                 min_share_frac: float = 0.0):
         assert policy in ("immediate", "alma-paper", "alma-plus")
         self.policy = policy
         self.max_wait = max_wait
@@ -74,6 +86,16 @@ class LMCM:
         self._seq = 0
         self.running: List[MigrationRequest] = []
         self.log: List[MigrationRequest] = []
+        # realized-bandwidth feedback from the migration plane: fair-share
+        # bandwidth a request would get right now, given what's in flight
+        # plus ``extra`` launches committed in the same release burst. The
+        # simulator wires this to MigrationPlane.probe_bandwidth; the
+        # deadline check and the alma-plus cost scan use it in place of the
+        # nominal link speed, and ``due`` defers launches whose share would
+        # fall below ``min_share_frac`` x nominal (0 disables the gate).
+        self.bandwidth_probe: Optional[
+            Callable[[MigrationRequest, int], float]] = None
+        self.min_share_frac = min_share_frac
 
     # -- registration --------------------------------------------------------
     def register_job(self, job_id: str, telemetry: TelemetryBuffer,
@@ -98,6 +120,21 @@ class LMCM:
     # -- the decision (paper §5.2 + Fig. 5c) ----------------------------------
     def decide(self, req: MigrationRequest, now: float) -> float:
         """Returns the wait time (seconds); -1 means cancel."""
+        wait = self._policy_wait(req, now)
+        # provider constraint: never postpone beyond max_wait
+        wait = min(wait, self.max_wait)
+        # customer constraint: cancel if workload ends before migration pays
+        # (judged at the REALIZED bandwidth the contended link would give us,
+        # not the nominal link speed)
+        if req.deadline is not None:
+            t_mig = strunk.strunk_bounds(req.v_bytes,
+                                         self.effective_bandwidth(req))[0]
+            if now + wait + t_mig >= req.deadline:
+                return -1.0
+        return wait
+
+    def _policy_wait(self, req: MigrationRequest, now: float) -> float:
+        """The policy's raw postponement, before provider/customer knobs."""
         if self.policy == "immediate":
             return 0.0
         job = self.jobs.get(req.job_id)
@@ -105,21 +142,22 @@ class LMCM:
         if model is None or not model.cyclic:
             return 0.0                     # acyclic: nothing to exploit
         m_now = int(now / self.sample_period) - job.origin_step
-
         if self.policy == "alma-paper":
-            remain = pp.postpone(model, m_now)
-            wait = remain * self.sample_period
-        else:
-            wait = self._best_window_wait(job, model, req, now)
+            return pp.postpone(model, m_now) * self.sample_period
+        return self._best_window_wait(job, model, req, now)
 
-        # provider constraint: never postpone beyond max_wait
-        wait = min(wait, self.max_wait)
-        # customer constraint: cancel if workload ends before migration pays
-        if req.deadline is not None:
-            t_mig = strunk.strunk_bounds(req.v_bytes, self.bandwidth)[0]
-            if now + wait + t_mig >= req.deadline:
-                return -1.0
-        return wait
+    def effective_bandwidth(self, req: MigrationRequest,
+                            extra: int = 0) -> float:
+        """Bandwidth this request would realize now: the plane's fair-share
+        probe when wired, capped by the nominal link speed. ``extra`` counts
+        launches already released in the same burst but not yet in flight
+        (approximated as sharing this request's path)."""
+        if self.bandwidth_probe is None:
+            return self.bandwidth
+        probed = self.bandwidth_probe(req, extra)
+        if not np.isfinite(probed) or probed <= 0:
+            return self.bandwidth
+        return min(self.bandwidth, probed)
 
     def _best_window_wait(self, job: SurveilledJob, model: cycles.CycleModel,
                           req: MigrationRequest, now: float) -> float:
@@ -136,9 +174,9 @@ class LMCM:
         candidates = np.unique(np.concatenate(
             [[min(remain, self.max_wait)],
              np.linspace(0.0, horizon, num=min(32, model.period + 1))]))
-        costs = np.asarray(
-            [strunk.expected_cost(req.v_bytes, self.bandwidth, rate,
-                                  start_time=now + c) for c in candidates])
+        costs = strunk.expected_cost_batch(
+            req.v_bytes, self.effective_bandwidth(req), rate,
+            now + candidates)
         best = costs.min()
         ok = costs <= best * 1.01
         if ok[candidates == min(remain, self.max_wait)].any():
@@ -157,13 +195,37 @@ class LMCM:
         heapq.heappush(self.queue, (req.scheduled_at, self._seq, req))
         self._seq += 1
 
+    def cancel(self, req: MigrationRequest) -> None:
+        """Withdraw a request (e.g. the consolidation plan was revised).
+        Heap entries are left in place; ``due`` skips non-scheduled pops."""
+        if req.decision in ("pending", "scheduled"):
+            req.decision = "cancelled"
+            self.log.append(req)
+
     def due(self, now: float) -> List[MigrationRequest]:
-        """Pop requests whose moment has come, honoring max_concurrent."""
+        """Pop requests whose moment has come, honoring max_concurrent and
+        (when the plane is wired) the realized-bandwidth launch gate."""
         out = []
         self.running = [r for r in self.running if r.decision == "running"]
         while (self.queue and self.queue[0][0] <= now
                and len(self.running) + len(out) < self.max_concurrent):
             _, _, req = heapq.heappop(self.queue)
+            if req.decision != "scheduled":
+                continue            # cancelled after scheduling: stale entry
+            # contention gate: if launching now would realize less than
+            # min_share_frac of the nominal link speed, defer one sampling
+            # period (but never past max_wait, and never when idle)
+            if (self.min_share_frac > 0.0 and self.bandwidth_probe is not None
+                    and (len(self.running) + len(out)) > 0
+                    and now + self.sample_period
+                    <= req.created_at + self.max_wait):
+                if (self.effective_bandwidth(req, extra=len(out))
+                        < self.min_share_frac * self.bandwidth):
+                    req.scheduled_at = now + self.sample_period
+                    heapq.heappush(self.queue, (req.scheduled_at, self._seq,
+                                                req))
+                    self._seq += 1
+                    continue
             # re-check suitability at fire time (cycle may have drifted)
             if self.policy != "immediate":
                 wait = self.decide(req, now)

@@ -1,0 +1,200 @@
+"""Migration execution plane — batched, contention-aware pre-copy execution.
+
+The seed executed each migration as an isolated scalar ``simulate_precopy``
+call at full link bandwidth: concurrency cost nothing, so the ALMA-vs-
+immediate gap the paper measures (Tables 6-7) was understated at fleet
+scale. This plane advances ALL in-flight migrations together against the
+shared-link network model (``core/network.py``):
+
+  * every in-flight migration is a *lane* running the exact Strunk pre-copy
+    round recurrence of ``core/strunk.py`` (round i copies the bytes
+    dirtied during round i-1; the three Xen stop conditions; a final
+    stop-and-copy transfer whose duration is the downtime);
+  * a lane's bandwidth is its max-min fair share of the links on its
+    src->dst path, recomputed at every event boundary — another migration
+    starting, finishing, or completing a round changes everyone's share;
+  * dirty bytes accrue per event chunk (rate sampled mid-chunk), which
+    degenerates to the reference's mid-round sampling when a round runs
+    uninterrupted — an uncontended single lane is bit-equal to
+    ``strunk.simulate_precopy_reference`` (asserted in tests).
+
+``advance(until)`` is the event loop: compute fair shares, find the
+earliest round completion, move every lane forward by that chunk, settle
+completed rounds, repeat. ``FleetSim`` drives it one sampling period at a
+time; benchmarks drive it to drain. Per-link byte counters support the
+conservation invariant (bytes through a link <= capacity x elapsed time)
+and the link-utilization columns of the table6/7 benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import network, strunk
+
+_COPY, _STOP = 0, 1
+
+
+@dataclass
+class _LaneMeta:
+    req: object                          # orchestrator.MigrationRequest
+    rate_fn: Optional[Callable[[float], float]]
+    path: Tuple[str, ...]
+    t_start: float
+
+
+class MigrationPlane:
+    """Event-driven executor for concurrent pre-copy migrations."""
+
+    def __init__(self, topology: network.Topology, *,
+                 page: int = strunk.PAGE,
+                 max_rounds: int = strunk.XEN_MAX_ROUNDS,
+                 stop_dirty_pages: int = strunk.XEN_STOP_DIRTY_PAGES,
+                 stop_total_factor: float = strunk.XEN_STOP_TOTAL_FACTOR):
+        self.topology = topology
+        self.caps = topology.capacities
+        self.max_rounds = max_rounds
+        self.stop_total_factor = stop_total_factor
+        self._thresh = float(stop_dirty_pages) * page
+        self._fallback_bw = max(self.caps.values(), default=np.inf)
+        self.now = 0.0
+        self._meta: List[_LaneMeta] = []
+        # completions produced by launch()'s internal catch-up advance are
+        # parked here and handed to the caller on the next advance()
+        self._backlog: List[Tuple[object, strunk.MigrationOutcome]] = []
+        # SoA lane state, one row per in-flight migration
+        self._v = np.zeros(0)            # migratable bytes
+        self._rem = np.zeros(0)          # bytes left in the current transfer
+        self._round = np.zeros(0)        # size of the current transfer
+        self._acc = np.zeros(0)          # dirty bytes accrued this round
+        self._sent = np.zeros(0)
+        self._rounds = np.zeros(0, np.int64)
+        self._down = np.zeros(0)
+        self._phase = np.zeros(0, np.int8)
+        self._reason = np.zeros(0, np.int8)
+        self.link_bytes: Dict[str, float] = {}
+        self.last_shares: Dict[str, float] = {}
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return len(self._meta)
+
+    def jobs_in_flight(self) -> List[str]:
+        return [m.req.job_id for m in self._meta]
+
+    def probe_bandwidth(self, src: str, dst: str, extra: int = 0) -> float:
+        """Fair-share bandwidth a NEW src->dst migration would receive right
+        now, given everything already in flight — the realized-bandwidth
+        signal the LMCM feeds into its deadline/cost decisions. ``extra``
+        counts additional same-path launches already committed but not yet
+        on the plane (a simultaneous release burst shares with itself)."""
+        path = self.topology.path(src, dst)
+        paths = [m.path for m in self._meta] + [path] * (extra + 1)
+        share = float(network.fair_share(paths, self.caps)[-1])
+        return share if np.isfinite(share) else self._fallback_bw
+
+    # -- lifecycle -----------------------------------------------------------
+    def launch(self, req, rate_fn: Optional[Callable[[float], float]],
+               now: float, *, path: Optional[Sequence[str]] = None) -> None:
+        """Start executing ``req`` at time ``now`` (>= plane time)."""
+        if now > self.now:
+            self._backlog.extend(self.advance(now))
+        if rate_fn is not None and not callable(rate_fn):
+            const = float(rate_fn)
+            rate_fn = lambda _t: const
+        p = tuple(path) if path is not None else \
+            self.topology.path(req.src, req.dst)
+        v = float(req.v_bytes)
+        self._meta.append(_LaneMeta(req, rate_fn, p, now))
+        self._v = np.append(self._v, v)
+        self._rem = np.append(self._rem, v)
+        self._round = np.append(self._round, v)
+        self._acc = np.append(self._acc, 0.0)
+        self._sent = np.append(self._sent, 0.0)
+        self._rounds = np.append(self._rounds, 0)
+        self._down = np.append(self._down, 0.0)
+        self._phase = np.append(self._phase, _COPY)
+        self._reason = np.append(self._reason, strunk.REASON_MAX_ROUNDS)
+
+    def advance(self, until: float):
+        """Run the event loop to ``until`` (or until drained); returns the
+        list of (request, MigrationOutcome) completed in this window, plus
+        any completions a launch-time catch-up produced earlier."""
+        finished: List[Tuple[object, strunk.MigrationOutcome]] = \
+            self._backlog
+        self._backlog = []
+        while self._meta and self.now < until:
+            shares = network.fair_share([m.path for m in self._meta],
+                                        self.caps)
+            shares = np.where(np.isfinite(shares), shares, self._fallback_bw)
+            t_done = np.where(
+                self._rem <= 0.0, 0.0,
+                np.divide(self._rem, shares,
+                          out=np.full_like(self._rem, np.inf),
+                          where=shares > 0))
+            dt = min(float(t_done.min()), until - self.now)
+            complete = t_done <= dt * (1 + 1e-12)
+            mid = self.now + 0.5 * dt
+            for i, meta in enumerate(self._meta):
+                if self._phase[i] == _COPY and meta.rate_fn is not None:
+                    self._acc[i] += max(0.0, float(meta.rate_fn(mid))) * dt
+                moved = float(self._rem[i]) if complete[i] \
+                    else float(shares[i]) * dt
+                for l in meta.path:
+                    self.link_bytes[l] = self.link_bytes.get(l, 0.0) + moved
+            self._down = self._down + np.where(self._phase == _STOP, dt, 0.0)
+            self._rem = np.where(complete, 0.0, self._rem - shares * dt)
+            self.now += dt
+            self.last_shares = {m.req.job_id: float(s)
+                                for m, s in zip(self._meta, shares)}
+            drop: List[int] = []
+            for i in np.flatnonzero(complete):
+                out = self._settle(int(i))
+                if out is not None:
+                    finished.append((self._meta[i].req, out))
+                    drop.append(int(i))
+            if drop:
+                keep = [i for i in range(len(self._meta)) if i not in drop]
+                self._meta = [self._meta[i] for i in keep]
+                for name in ("_v", "_rem", "_round", "_acc", "_sent",
+                             "_rounds", "_down", "_phase", "_reason"):
+                    setattr(self, name, getattr(self, name)[keep])
+        # an infinite drain must not poison the clock: time only ever
+        # fast-forwards to a finite target
+        if not self._meta and self.now < until and np.isfinite(until):
+            self.now = until
+        return finished
+
+    def _settle(self, i: int) -> Optional[strunk.MigrationOutcome]:
+        """A lane's current transfer just completed: close the round (apply
+        the Xen stop conditions in the reference's priority order) or, if it
+        was the stop-and-copy, produce the outcome."""
+        if self._phase[i] == _COPY:
+            self._sent[i] += self._round[i]
+            self._rounds[i] += 1
+            dirtied = min(float(self._v[i]), float(self._acc[i]))
+            stop: Optional[int] = None
+            if dirtied <= self._thresh:
+                stop = strunk.REASON_DIRTY_LOW
+            elif self._rounds[i] >= self.max_rounds:
+                stop = strunk.REASON_MAX_ROUNDS
+            elif self._sent[i] + dirtied > self.stop_total_factor * self._v[i]:
+                stop = strunk.REASON_TOTAL_CAP
+            self._round[i] = dirtied
+            self._rem[i] = dirtied
+            self._acc[i] = 0.0
+            if stop is not None:
+                self._phase[i] = _STOP
+                self._reason[i] = stop
+            return None
+        self._sent[i] += self._round[i]
+        meta = self._meta[i]
+        return strunk.MigrationOutcome(
+            total_time=self.now - meta.t_start,
+            downtime=float(self._down[i]),
+            bytes_sent=float(self._sent[i]),
+            rounds=int(self._rounds[i]),
+            stop_reason=strunk.STOP_REASONS[int(self._reason[i])])

@@ -8,18 +8,47 @@ constant or a callable of absolute time, which is how the fleet simulator
 injects the *workload-phase-dependent* dirty rate — the whole point of the
 paper: the same migration started in an NLM phase costs multiples of one
 started in an LM phase.
+
+Two executions of the same model:
+
+  * ``simulate_precopy_reference`` — the original scalar Python loop, kept
+    as the executable specification (and as the honest per-request baseline
+    for the concurrency-sweep benchmark).
+  * ``simulate_precopy_batch`` — one vectorized simulation over (M,)
+    in-flight migrations: per-round dirty-rate sampling across all lanes,
+    the three Xen stop conditions evaluated as masked lanes, per-lane
+    start times and bandwidths. Bit-equal to the reference lane-for-lane
+    (same float64 operation order), which ``tests/test_precopy.py``
+    asserts across all three stop reasons and callable rates.
+
+``simulate_precopy`` is the M=1 view of the batch path — the same
+structural-parity pattern as ``cycles.fit_cycle`` vs ``fit_cycle_batch``.
+The contention-aware execution plane (``core/plane.py``) re-implements the
+identical round recurrence with bandwidth recomputed at round boundaries
+from the shared-link network model; its uncontended single-lane output is
+bit-equal to this module's.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Tuple, Union
+from typing import Callable, Sequence, Tuple, Union
+
+import numpy as np
 
 DirtyRate = Union[float, Callable[[float], float]]
+# batch rates: one spec per lane, or a single spec broadcast to every lane,
+# or a vectorized callable (marked ``.vectorized = True``) mapping an (M,)
+# time array to an (M,) rate array in one call.
+BatchDirtyRate = Union[DirtyRate, Sequence[DirtyRate]]
 
 PAGE = 4096
 XEN_MAX_ROUNDS = 29
 XEN_STOP_DIRTY_PAGES = 50
 XEN_STOP_TOTAL_FACTOR = 3.0
+
+# stop-reason lane codes (batch) <-> names (scalar outcomes)
+REASON_DIRTY_LOW, REASON_MAX_ROUNDS, REASON_TOTAL_CAP = 0, 1, 2
+STOP_REASONS = ("dirty_low", "max_rounds", "total_cap")
 
 
 def strunk_bounds(v_mem: float, bandwidth: float,
@@ -37,13 +66,178 @@ class MigrationOutcome:
     stop_reason: str
 
 
+@dataclass
+class BatchMigrationOutcome:
+    """(M,) pre-copy outcomes — SoA arrays plus a scalar accessor."""
+    total_time: np.ndarray
+    downtime: np.ndarray
+    bytes_sent: np.ndarray
+    rounds: np.ndarray
+    stop_reason: np.ndarray    # int codes, see STOP_REASONS
+
+    def __len__(self) -> int:
+        return len(self.total_time)
+
+    def item(self, i: int) -> MigrationOutcome:
+        return MigrationOutcome(
+            total_time=float(self.total_time[i]),
+            downtime=float(self.downtime[i]),
+            bytes_sent=float(self.bytes_sent[i]),
+            rounds=int(self.rounds[i]),
+            stop_reason=STOP_REASONS[int(self.stop_reason[i])])
+
+
+def batch_rate_fn(dirty_rate: BatchDirtyRate, m: int
+                  ) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:
+    """Normalize a batch dirty-rate spec to ``f(t, active) -> rates``.
+
+    ``t`` is the (M,) absolute sample time per lane; only lanes with
+    ``active`` True need a valid rate. Scalars broadcast; a callable with
+    ``.vectorized`` set is called once on the whole time array; plain
+    callables are sampled per active lane (the compatibility path for the
+    fleet's per-job ``trace.dirty_rate`` functions).
+    """
+    if callable(dirty_rate) and getattr(dirty_rate, "vectorized", False):
+        return lambda t, active: np.asarray(dirty_rate(t), np.float64)
+    if callable(dirty_rate):
+        def one_fn(t: np.ndarray, active: np.ndarray) -> np.ndarray:
+            out = np.zeros(m)
+            for i in np.flatnonzero(active):
+                out[i] = float(dirty_rate(float(t[i])))
+            return out
+        return one_fn
+    if np.isscalar(dirty_rate):
+        const = np.full(m, float(dirty_rate))
+        return lambda t, active: const
+    specs = list(dirty_rate)
+    if len(specs) != m:
+        raise ValueError(f"{len(specs)} rate specs for {m} lanes")
+    call_idx = [i for i, s in enumerate(specs) if callable(s)]
+    base = np.asarray([0.0 if callable(s) else float(s) for s in specs])
+    if not call_idx:
+        return lambda t, active: base
+
+    def mixed_fn(t: np.ndarray, active: np.ndarray) -> np.ndarray:
+        out = base.copy()
+        for i in call_idx:
+            if active[i]:
+                out[i] = float(specs[i](float(t[i])))
+        return out
+    return mixed_fn
+
+
+def simulate_precopy_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
+                           *, start_time=0.0, page: int = PAGE,
+                           max_rounds: int = XEN_MAX_ROUNDS,
+                           stop_dirty_pages: int = XEN_STOP_DIRTY_PAGES,
+                           stop_total_factor: float = XEN_STOP_TOTAL_FACTOR,
+                           ) -> BatchMigrationOutcome:
+    """Vectorized pre-copy over (M,) lanes (paper §3.2 stages 2–3).
+
+    Every lane runs the reference recurrence — round 0 copies all of V_mem,
+    round i copies the bytes dirtied during round i-1, the dirty rate is
+    sampled mid-round at each lane's own absolute time — with the three Xen
+    stop conditions applied as masks. Finished lanes freeze while the rest
+    keep iterating, so one call simulates M migrations of arbitrary length
+    in max(rounds) vector steps.
+    """
+    v = np.atleast_1d(np.asarray(v_mem, np.float64))
+    m = v.shape[0]
+    bw = np.broadcast_to(np.asarray(bandwidth, np.float64), (m,))
+    t0 = np.broadcast_to(np.asarray(start_time, np.float64), (m,))
+    rate = batch_rate_fn(dirty_rate, m)
+
+    nonneg = bool(getattr(dirty_rate, "nonneg", False)) or (
+        np.isscalar(dirty_rate) and not callable(dirty_rate)
+        and float(dirty_rate) >= 0.0)
+    t = t0.astype(np.float64).copy()
+    sent = np.zeros(m)
+    rounds = np.zeros(m, np.int64)
+    reason = np.full(m, REASON_MAX_ROUNDS, np.int8)
+    active = np.ones(m, bool)
+    thresh = float(stop_dirty_pages) * page
+    cap = stop_total_factor * v
+    # ``work`` holds the current round's bytes for active lanes and 0 for
+    # stopped ones, so every accumulator update below is unconditional —
+    # stopped lanes add exactly 0.0, which keeps them bit-frozen without a
+    # mask per update. All round-local arrays are preallocated buffers
+    # updated with in-place ufuncs: this loop is the fleet's hot path and
+    # numpy dispatch + temporaries dominate at fleet lane counts.
+    work = v.copy()
+    final = np.zeros(m)                  # dirtied bytes at stop -> stop&copy
+    dt = np.empty(m)
+    mid = np.empty(m)
+    dirtied = np.empty(m)
+    tmp = np.empty(m)
+    c_dirty = np.empty(m, bool)
+    c_total = np.empty(m, bool)
+    stop = np.empty(m, bool)
+    k = 0                                # a lane active at iteration k has
+    while True:                          # rounds == k+1, so the max_rounds
+        k += 1                           # test is a Python scalar compare
+        np.divide(work, bw, out=dt)
+        np.multiply(dt, 0.5, out=mid)
+        np.add(mid, t, out=mid)          # == t + 0.5*dt (exact: commutative)
+        r = rate(mid, active)
+        if nonneg:                       # max(0, r) == r exactly for r >= 0
+            np.multiply(r, dt, out=tmp)
+        else:
+            np.maximum(r, 0.0, out=tmp)
+            np.multiply(tmp, dt, out=tmp)
+        np.minimum(tmp, v, out=dirtied)  # == min(v, max(0, r)*dt)
+        sent += work
+        t += dt
+        # stop conditions, priority-ordered exactly as the reference loop:
+        # dirty_low, then max_rounds, then total_cap
+        np.less_equal(dirtied, thresh, out=c_dirty)
+        np.add(sent, dirtied, out=tmp)
+        np.greater(tmp, cap, out=c_total)
+        if k >= max_rounds:
+            np.copyto(stop, active)
+        else:
+            np.logical_or(c_dirty, c_total, out=stop)
+            np.logical_and(stop, active, out=stop)
+        if stop.any():
+            later = REASON_MAX_ROUNDS if k >= max_rounds else REASON_TOTAL_CAP
+            np.copyto(reason, later, where=stop & ~c_dirty)
+            np.copyto(reason, REASON_DIRTY_LOW, where=stop & c_dirty)
+            np.copyto(rounds, k, where=stop)
+            np.copyto(final, dirtied, where=stop)
+            np.logical_and(active, ~stop, out=active)
+            if not active.any():
+                break
+        np.multiply(dirtied, active, out=work)   # zero stopped lanes exactly
+    downtime = final / bw                            # stop-and-copy
+    sent = sent + final
+    t = t + downtime
+    return BatchMigrationOutcome(total_time=t - t0, downtime=downtime,
+                                 bytes_sent=sent, rounds=rounds,
+                                 stop_reason=reason.astype(np.int64))
+
+
 def simulate_precopy(v_mem: float, bandwidth: float, dirty_rate: DirtyRate,
                      *, start_time: float = 0.0, page: int = PAGE,
                      max_rounds: int = XEN_MAX_ROUNDS,
                      stop_dirty_pages: int = XEN_STOP_DIRTY_PAGES,
                      stop_total_factor: float = XEN_STOP_TOTAL_FACTOR,
                      ) -> MigrationOutcome:
-    """Iterative pre-copy (paper §3.2 five-stage algorithm, stages 2–3).
+    """Scalar pre-copy simulation — the M=1 view of the batch path."""
+    batch = simulate_precopy_batch(
+        [v_mem], bandwidth, dirty_rate, start_time=start_time, page=page,
+        max_rounds=max_rounds, stop_dirty_pages=stop_dirty_pages,
+        stop_total_factor=stop_total_factor)
+    return batch.item(0)
+
+
+def simulate_precopy_reference(v_mem: float, bandwidth: float,
+                               dirty_rate: DirtyRate,
+                               *, start_time: float = 0.0, page: int = PAGE,
+                               max_rounds: int = XEN_MAX_ROUNDS,
+                               stop_dirty_pages: int = XEN_STOP_DIRTY_PAGES,
+                               stop_total_factor: float = XEN_STOP_TOTAL_FACTOR,
+                               ) -> MigrationOutcome:
+    """The original scalar loop — executable spec the batch path must match
+    bit-for-bit, and the per-request baseline the concurrency sweep times.
 
     Round 0 copies all of V_mem; round i copies the bytes dirtied during
     round i-1. ``dirty_rate(t)`` is sampled at absolute time ``t`` so cyclic
@@ -89,3 +283,13 @@ def expected_cost(v_mem: float, bandwidth: float, dirty_rate: DirtyRate,
     """Scalar cost used by the 'alma-plus' window chooser: total bytes sent."""
     return simulate_precopy(v_mem, bandwidth, dirty_rate,
                             start_time=start_time).bytes_sent
+
+
+def expected_cost_batch(v_mem: float, bandwidth: float,
+                        dirty_rate: BatchDirtyRate,
+                        start_times: np.ndarray) -> np.ndarray:
+    """Vectorized 'alma-plus' window scan: bytes sent for one migration
+    hypothetically started at each of (M,) candidate moments."""
+    m = len(start_times)
+    return simulate_precopy_batch(np.full(m, v_mem), bandwidth, dirty_rate,
+                                  start_time=start_times).bytes_sent

@@ -1,0 +1,75 @@
+"""Consolidation planner: FFD packing, the O(1) job->host index behind
+``Placement.host_of``, and src/dst tagging of the migration plan."""
+import numpy as np
+
+from repro.core import consolidation as cs
+
+
+def _placement(n_hosts=4, jobs_per_host=2, cap=4.0, load=1.0):
+    hosts = {}
+    for h in range(n_hosts):
+        hid = f"h{h}"
+        hosts[hid] = cs.Host(hid, cap, {f"j{h}_{k}": load
+                                        for k in range(jobs_per_host)})
+    return cs.Placement(hosts)
+
+
+def test_host_of_index_matches_hosts():
+    p = _placement()
+    for h in p.hosts.values():
+        for j in h.jobs:
+            assert p.host_of(j) == h.host_id
+    assert p.host_of("nope") is None
+
+
+def test_ffd_consolidates_and_tags_requests():
+    p = _placement(n_hosts=4, jobs_per_host=2, cap=4.0, load=1.0)
+    new_p, plan = cs.consolidate_ffd(p, now=7.0,
+                                     state_bytes={"j0_0": 5e8})
+    # 8 unit jobs fit on 2 hosts of capacity 4
+    assert cs.hosts_used(new_p) == 2
+    # index in the repacked placement is in sync with the host dicts
+    for h in new_p.hosts.values():
+        for j in h.jobs:
+            assert new_p.host_of(j) == h.host_id
+    for req in plan:
+        assert req.src and req.dst and req.src != req.dst
+        assert new_p.host_of(req.job_id) == req.dst
+        assert p.host_of(req.job_id) == req.src
+        assert req.created_at == 7.0
+    moved = {r.job_id for r in plan}
+    assert "j0_0" not in moved or next(
+        r for r in plan if r.job_id == "j0_0").v_bytes == 5e8
+
+
+def test_assign_and_move_keep_index_in_sync():
+    p = _placement(n_hosts=3, jobs_per_host=1, cap=4.0)
+    p.assign("new_job", "h2", 2.0)
+    assert p.host_of("new_job") == "h2"
+    assert p.hosts["h2"].jobs["new_job"] == 2.0
+    p.move("new_job", "h0")
+    assert p.host_of("new_job") == "h0"
+    assert "new_job" not in p.hosts["h2"].jobs
+    assert p.hosts["h0"].jobs["new_job"] == 2.0
+    p.move("new_job", "h0")              # no-op move keeps state coherent
+    assert p.hosts["h0"].jobs["new_job"] == 2.0
+
+
+def test_overfull_placement_keeps_jobs_in_place():
+    hosts = {"a": cs.Host("a", 1.0, {"big": 1.0}),
+             "b": cs.Host("b", 1.0, {"huge": 1.0})}
+    new_p, plan = cs.consolidate_ffd(cs.Placement(hosts))
+    assert plan == []
+    assert new_p.host_of("big") == "a" and new_p.host_of("huge") == "b"
+
+
+def test_host_of_scales_constant_time():
+    """The index makes host_of independent of fleet size (regression for
+    the O(hosts x jobs) linear scan on the per-request path)."""
+    p = _placement(n_hosts=200, jobs_per_host=50, cap=100.0)
+    import time
+    t0 = time.perf_counter()
+    for _ in range(1000):
+        p.host_of("h199_49")
+    dt = time.perf_counter() - t0
+    assert dt < 0.05, dt                 # 10k scans would take far longer

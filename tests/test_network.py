@@ -1,0 +1,164 @@
+"""Shared-link network model + migration plane invariants.
+
+Max-min fairness properties of ``network.fair_share``, topology path
+resolution, and the execution plane's two core contracts: an uncontended
+lane is bit-equal to the scalar Strunk reference, and a contended link
+never carries more than capacity x time (conservation)."""
+import numpy as np
+import pytest
+
+from repro.core import network, strunk
+from repro.core.fleetsim import WorkloadTrace
+from repro.core.orchestrator import MigrationRequest
+from repro.core.plane import MigrationPlane
+
+
+# ---------------------------------------------------------------------------
+# fair share
+# ---------------------------------------------------------------------------
+def test_single_link_equal_split():
+    caps = {"L": 100.0}
+    for m in (1, 2, 5, 64):
+        r = network.fair_share([("L",)] * m, caps)
+        np.testing.assert_allclose(r, 100.0 / m)
+
+
+def test_bottleneck_flow_frees_slack():
+    # B is capped by L2 (4); A picks up the slack on L1 (10 - 4 = 6)
+    caps = {"L1": 10.0, "L2": 4.0}
+    r = network.fair_share([("L1",), ("L1", "L2")], caps)
+    np.testing.assert_allclose(r, [6.0, 4.0])
+
+
+def test_fair_share_respects_all_capacities():
+    rng = np.random.default_rng(0)
+    links = [f"L{i}" for i in range(6)]
+    caps = {l: float(rng.uniform(1, 20)) for l in links}
+    for _ in range(20):
+        paths = [tuple(rng.choice(links, size=rng.integers(1, 4),
+                                  replace=False))
+                 for _ in range(rng.integers(1, 10))]
+        rates = network.fair_share(paths, caps)
+        assert np.all(rates > 0)
+        for l in links:
+            used = sum(r for r, p in zip(rates, paths) if l in p)
+            assert used <= caps[l] * (1 + 1e-9)
+        # max-min: every flow is bottlenecked at some saturated link
+        for r, p in zip(rates, paths):
+            saturated = any(
+                sum(q for q, pp in zip(rates, paths) if l in pp)
+                >= caps[l] * (1 - 1e-9) for l in p)
+            assert saturated, (r, p)
+
+
+def test_unconstrained_flow_is_inf():
+    r = network.fair_share([(), ("L",)], {"L": 5.0})
+    assert np.isinf(r[0]) and r[1] == 5.0
+
+
+# ---------------------------------------------------------------------------
+# topology
+# ---------------------------------------------------------------------------
+def test_single_link_topology_paths():
+    topo = network.Topology.single_link(125e6)
+    assert topo.path("h0", "h1") == ("migration-net",)
+    assert topo.path("", "") == ("migration-net",)
+
+
+def test_star_topology_paths():
+    topo = network.Topology.star(["h0", "h1", "h2"], 10.0, core_capacity=15.0)
+    assert topo.path("h0", "h1") == ("acc:h0", "core", "acc:h1")
+    # same-host migration doesn't double-charge its access link
+    assert topo.path("h0", "h0") == ("acc:h0", "core")
+
+
+def test_topology_rejects_unknown_link():
+    with pytest.raises(KeyError):
+        network.Topology([network.Link("a", 1.0)], {"h": ("a", "b")})
+
+
+# ---------------------------------------------------------------------------
+# the migration plane
+# ---------------------------------------------------------------------------
+def _outcome_tuple(o):
+    return (o.total_time, o.downtime, o.bytes_sent, o.rounds, o.stop_reason)
+
+
+@pytest.mark.parametrize("v,rate,kw", [
+    (1.5e9, 2e6, {}),                       # dirty_low
+    (1e9, 0.6 * 125e6, {"max_rounds": 5}),  # max_rounds
+    (1e9, 150e6, {}),                       # total_cap
+])
+def test_uncontended_lane_bit_equals_reference(v, rate, kw):
+    plane = MigrationPlane(network.Topology.single_link(125e6), **kw)
+    plane.launch(MigrationRequest("j", 0.0, v), rate, 0.0)
+    (req, out), = plane.advance(np.inf)
+    ref = strunk.simulate_precopy_reference(v, 125e6, rate, **kw)
+    assert _outcome_tuple(out) == _outcome_tuple(ref)
+
+
+def test_uncontended_lane_with_cyclic_trace():
+    tr = WorkloadTrace([("MEM", 100), ("CPU", 100)], 200)
+    plane = MigrationPlane(network.Topology.single_link(125e6))
+    plane.launch(MigrationRequest("j", 0.0, 2e9), tr.dirty_rate, 110.0)
+    (req, out), = plane.advance(np.inf)
+    ref = strunk.simulate_precopy_reference(2e9, 125e6, tr.dirty_rate,
+                                            start_time=110.0)
+    assert _outcome_tuple(out) == _outcome_tuple(ref)
+
+
+def test_contention_slows_both_lanes():
+    plane = MigrationPlane(network.Topology.single_link(125e6))
+    for j in ("a", "b"):
+        plane.launch(MigrationRequest(j, 0.0, 1e9), 3e6, 0.0)
+    outs = dict((r.job_id, o) for r, o in plane.advance(np.inf))
+    alone = strunk.simulate_precopy_reference(1e9, 125e6, 3e6)
+    for o in outs.values():
+        assert o.total_time > alone.total_time * 1.5
+        # halved bandwidth -> longer rounds -> more dirtying -> more bytes
+        assert o.bytes_sent >= alone.bytes_sent
+
+
+def test_conservation_on_contended_link():
+    """Total bytes across a shared 1 Gbit/s link <= capacity x elapsed."""
+    cap = 125e6
+    plane = MigrationPlane(network.Topology.single_link(cap))
+    tr = WorkloadTrace([("MEM", 60), ("CPU", 60)], 120)
+    rng = np.random.default_rng(3)
+    for j in range(8):
+        plane.launch(MigrationRequest(f"j{j}", 0.0,
+                                      float(rng.uniform(0.5e9, 2e9))),
+                     tr.dirty_rate, 0.0)
+    outs = [o for _, o in plane.advance(np.inf)]
+    assert len(outs) == 8
+    elapsed = plane.now          # all launched at t=0
+    moved = plane.link_bytes["migration-net"]
+    assert moved <= cap * elapsed * (1 + 1e-9)
+    assert moved == pytest.approx(sum(o.bytes_sent for o in outs), rel=1e-9)
+
+
+def test_staggered_launch_and_stepped_advance():
+    """Lanes joining mid-flight shrink everyone's share; stepping the plane
+    in 1 s chunks reaches the same completion set as one big advance."""
+    plane = MigrationPlane(network.Topology.single_link(125e6))
+    plane.launch(MigrationRequest("a", 0.0, 1e9), 2e6, 0.0)
+    plane.launch(MigrationRequest("b", 0.0, 1e9), 2e6, 3.0)  # advances to t=3
+    assert plane.now == 3.0
+    assert plane.last_shares["a"] == 125e6   # a ran alone until b arrived
+    done = {}
+    t = 3.0
+    while plane.in_flight:
+        t += 1.0
+        done.update((r.job_id, o) for r, o in plane.advance(t))
+    assert set(done) == {"a", "b"}
+    # a had a 3 s head start at full bandwidth, so it finishes first
+    assert done["a"].total_time < done["b"].total_time
+
+
+def test_probe_bandwidth_feedback():
+    plane = MigrationPlane(network.Topology.single_link(100.0))
+    assert plane.probe_bandwidth("h0", "h1") == 100.0
+    plane.launch(MigrationRequest("x", 0.0, 1e9), 0.0, 0.0)
+    assert plane.probe_bandwidth("h0", "h1") == 50.0
+    plane.launch(MigrationRequest("y", 0.0, 1e9), 0.0, 0.0)
+    assert plane.probe_bandwidth("h0", "h1") == pytest.approx(100.0 / 3)

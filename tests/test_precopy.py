@@ -97,3 +97,91 @@ def test_phase_dependent_migration_cost():
     in_cpu = strunk.simulate_precopy(1e9, 125e6, tr.dirty_rate, start_time=110)
     assert in_cpu.bytes_sent < in_mem.bytes_sent
     assert in_cpu.total_time < in_mem.total_time
+
+
+# ---------------------------------------------------------------------------
+# batched simulator: lane-for-lane bit-equality with the scalar reference
+# ---------------------------------------------------------------------------
+def _as_tuple(o: strunk.MigrationOutcome):
+    return (o.total_time, o.downtime, o.bytes_sent, o.rounds, o.stop_reason)
+
+
+def test_batch_bit_equals_reference_all_stop_reasons():
+    """(M,) lanes covering all three Xen stop conditions, constant and
+    callable (cyclic-trace) dirty rates, per-lane start times — every lane
+    of the batch must equal the scalar reference EXACTLY (same float64
+    operation order, not just approximately)."""
+    from repro.core.fleetsim import WorkloadTrace
+    tr = WorkloadTrace([("MEM", 100), ("CPU", 100)], 200)
+    lanes = [
+        (1.5e9, 125e6, 2e6, 0.0),            # dirty_low
+        (1e9, 125e6, 150e6, 0.0),            # total_cap
+        (1e9, 250e6, 0.55 * 250e6, 3.5),     # dirty_low after many rounds
+        (2e9, 125e6, tr.dirty_rate, 10.0),   # NLM-phase start, trace rate
+        (2e9, 125e6, tr.dirty_rate, 110.0),  # LM-phase start, trace rate
+        (0.75e9, 100e6, 0.0, 42.0),          # idle lane, single round
+    ]
+    batch = strunk.simulate_precopy_batch(
+        [l[0] for l in lanes], [l[1] for l in lanes],
+        [l[2] for l in lanes], start_time=[l[3] for l in lanes])
+    reasons = set()
+    for i, (v, bw, rate, t0) in enumerate(lanes):
+        ref = strunk.simulate_precopy_reference(v, bw, rate, start_time=t0)
+        assert _as_tuple(batch.item(i)) == _as_tuple(ref), (i, ref)
+        reasons.add(ref.stop_reason)
+    assert {"dirty_low", "total_cap"} <= reasons
+
+
+def test_batch_bit_equals_reference_max_rounds():
+    # max_rounds needs a custom cap: at the Xen default the geometric dirty
+    # tail either dips under the dirty_low threshold or trips total_cap first
+    batch = strunk.simulate_precopy_batch(
+        [1e9, 1e9], 125e6, [0.6 * 125e6, 2e6], max_rounds=5)
+    for i, rate in enumerate((0.6 * 125e6, 2e6)):
+        ref = strunk.simulate_precopy_reference(1e9, 125e6, rate,
+                                                max_rounds=5)
+        assert _as_tuple(batch.item(i)) == _as_tuple(ref)
+    assert batch.item(0).stop_reason == "max_rounds"
+    assert batch.item(1).stop_reason == "dirty_low"
+
+
+def test_scalar_is_m1_view_of_batch():
+    """simulate_precopy is the M=1 view of the batch path and matches the
+    reference loop bit-for-bit."""
+    from repro.core.fleetsim import WorkloadTrace
+    tr = WorkloadTrace([("MEM", 30), ("CPU", 60), ("IDLE", 30)], 120)
+    for t0 in (0.0, 17.0, 35.0, 95.0):
+        a = strunk.simulate_precopy(1.2e9, 125e6, tr.dirty_rate,
+                                    start_time=t0)
+        b = strunk.simulate_precopy_reference(1.2e9, 125e6, tr.dirty_rate,
+                                              start_time=t0)
+        assert _as_tuple(a) == _as_tuple(b)
+
+
+def test_batch_vectorized_rate_matches_per_lane_callables():
+    """PiecewiseRate.batch (the fleet fast path) must sample identically to
+    each lane's scalar callable."""
+    from repro.core.fleetsim import PiecewiseRate, WorkloadTrace
+    traces = [WorkloadTrace([("MEM", 100), ("CPU", 100)], 200, offset=o)
+              for o in (0.0, 37.0, 121.0, 180.0)]
+    v = np.full(4, 1.6e9)
+    starts = np.array([0.0, 11.0, 63.0, 150.0])
+    fast = strunk.simulate_precopy_batch(
+        v, 125e6, PiecewiseRate.batch([t.rate_table for t in traces]),
+        start_time=starts)
+    slow = strunk.simulate_precopy_batch(
+        v, 125e6, [t.dirty_rate for t in traces], start_time=starts)
+    np.testing.assert_array_equal(fast.total_time, slow.total_time)
+    np.testing.assert_array_equal(fast.bytes_sent, slow.bytes_sent)
+    np.testing.assert_array_equal(fast.rounds, slow.rounds)
+    np.testing.assert_array_equal(fast.stop_reason, slow.stop_reason)
+
+
+def test_expected_cost_batch_matches_scalar_scan():
+    from repro.core.fleetsim import WorkloadTrace
+    tr = WorkloadTrace([("MEM", 50), ("CPU", 70)], 120)
+    starts = np.linspace(0.0, 120.0, 13)
+    batch = strunk.expected_cost_batch(1e9, 125e6, tr.dirty_rate, starts)
+    scalar = [strunk.expected_cost(1e9, 125e6, tr.dirty_rate, start_time=s)
+              for s in starts]
+    np.testing.assert_array_equal(batch, scalar)
