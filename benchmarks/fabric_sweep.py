@@ -1,0 +1,168 @@
+"""Sharded-fabric sweep — racks x lanes under core oversubscription.
+
+The multi-rack substrate (``network.Topology.multi_rack``): per-rack ToR
+access links at the paper's 1 Gbit/s, joined by a core sized at
+``racks x access / oversubscription`` (1:1 = non-blocking spine, 1:4 =
+heavily oversubscribed). Each configuration launches an intra-rack lane
+burst per rack plus a ring of cross-rack lanes through the core, drains
+the fabric, and records:
+
+  * per-link byte conservation (bytes <= capacity x elapsed) on EVERY
+    link — the fabric's correctness invariant under arbitrary sharing;
+  * how the core's oversubscription shifts bytes/time (the cross-rack
+    lanes are the ones that pay);
+  * domain statistics (shard count, merges) proving the fleet is NOT one
+    flat migration domain;
+  * steady-state event-loop cost per 1 s step: sharded vs monolithic
+    plane, vectorized vs the scalar reference loop — the fig11-style
+    overhead numbers at fabric scale.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import network
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import PAPER_BANDWIDTH, WorkloadTrace
+from repro.core.orchestrator import MigrationRequest
+from repro.core.plane import MigrationPlane
+
+ACCESS = PAPER_BANDWIDTH                  # 1 Gbit/s ToR links
+
+
+def _topology(racks: int, oversub: float) -> network.Topology:
+    return network.Topology.multi_rack(
+        racks, ACCESS, core_capacity=racks * ACCESS / oversub,
+        hosts_per_rack=2)
+
+
+def _launch_burst(plane, racks: int, lanes_per_rack: int, *,
+                  cross_lanes: int, rng: np.random.Generator,
+                  v_scale: float = 1.0) -> int:
+    tr = WorkloadTrace([("MEM", 60), ("CPU", 60)], 120)
+    n = 0
+    for r in range(racks):
+        for i in range(lanes_per_rack):
+            plane.launch(
+                MigrationRequest(f"r{r}j{i}", 0.0,
+                                 v_scale * float(rng.uniform(0.5e9, 1.5e9)),
+                                 src=f"r{r}h0", dst=f"r{r}h1"),
+                tr.rate_table, 0.0)
+            n += 1
+    for c in range(cross_lanes):
+        r = c % racks
+        plane.launch(
+            MigrationRequest(f"x{c}", 0.0,
+                             v_scale * float(rng.uniform(0.5e9, 1.5e9)),
+                             src=f"r{r}h0", dst=f"r{(r + 1) % racks}h0"),
+            tr.rate_table, 0.0)
+        n += 1
+    return n
+
+
+def run_config(racks: int, lanes_per_rack: int, oversub: float,
+               seed: int = 0) -> Dict:
+    """Drain one burst; verify conservation on every link."""
+    topo = _topology(racks, oversub)
+    plane = ShardedPlane(topo)
+    rng = np.random.default_rng(seed)
+    n = _launch_burst(plane, racks, lanes_per_rack,
+                      cross_lanes=racks, rng=rng)
+    domains_at_burst = plane.domain_count
+    done = plane.advance(np.inf)
+    elapsed = plane.now
+    caps = topo.capacities
+    conservation = {
+        l: b <= caps[l] * elapsed * (1 + 1e-9)
+        for l, b in plane.link_bytes.items()
+    }
+    outs = [o for _, o in done]
+    return {
+        "racks": racks,
+        "lanes_per_rack": lanes_per_rack,
+        "core_oversubscription": oversub,
+        "lanes": n,
+        "completed": len(outs),
+        "domains_at_burst": domains_at_burst,
+        "domain_merges": plane.merges,
+        "makespan_s": round(elapsed, 2),
+        "total_bytes_GB": round(sum(o.bytes_sent for o in outs) / 1e9, 3),
+        "sum_time_s": round(sum(o.total_time for o in outs), 2),
+        "links_checked": len(conservation),
+        "conservation_ok": all(conservation.values()),
+        "core_utilization": round(
+            plane.link_bytes.get("core", 0.0)
+            / (caps.get("core", np.inf) * elapsed), 3),
+    }
+
+
+def step_cost(racks: int, lanes_per_rack: int, *, mode: str,
+              n_steps: int = 64, seed: int = 0) -> float:
+    """Steady-state wall-clock microseconds per 1 s fabric step with every
+    lane still in flight. Modes: sharded / monolithic / scalar (the
+    monolithic per-lane reference loop)."""
+    topo = _topology(racks, 1.0)
+    if mode == "sharded":
+        plane = ShardedPlane(topo)
+    else:
+        plane = MigrationPlane(topo, vectorized=(mode == "monolithic"))
+    rng = np.random.default_rng(seed)
+    # state large enough that no lane completes inside the measurement
+    _launch_burst(plane, racks, lanes_per_rack, cross_lanes=racks,
+                  rng=rng, v_scale=1e3)
+    plane.advance(1.0)
+    now = plane.now
+    t0 = time.perf_counter()
+    for _ in range(n_steps):
+        now += 1.0
+        plane.advance(now)
+    return (time.perf_counter() - t0) / n_steps * 1e6
+
+
+def sweep(racks_list: Sequence[int] = (2, 4, 8),
+          lanes_list: Sequence[int] = (2, 8),
+          oversubs: Sequence[float] = (1.0, 2.0, 4.0)) -> List[Dict]:
+    rows = [run_config(r, lpr, ov)
+            for r in racks_list for lpr in lanes_list for ov in oversubs]
+    # step-cost rows at the smallest and largest requested configs (the
+    # quick smoke passes a reduced sweep; don't time beyond it)
+    step_configs = {(min(racks_list), min(lanes_list)),
+                    (max(racks_list), max(lanes_list))}
+    for racks, lpr in sorted(step_configs):
+        costs = {m: min(step_cost(racks, lpr, mode=m) for _ in range(3))
+                 for m in ("sharded", "monolithic", "scalar")}
+        rows.append({
+            "step_cost": True, "racks": racks, "lanes_per_rack": lpr,
+            "lanes": racks * (lpr + 1),
+            "sharded_us_per_step": round(costs["sharded"], 1),
+            "monolithic_us_per_step": round(costs["monolithic"], 1),
+            "scalar_us_per_step": round(costs["scalar"], 1),
+            "vectorized_speedup": round(
+                costs["scalar"] / max(costs["monolithic"], 1e-9), 2),
+            "sharded_speedup_vs_scalar": round(
+                costs["scalar"] / max(costs["sharded"], 1e-9), 2),
+        })
+    return rows
+
+
+def run():
+    t0 = time.perf_counter()
+    rows = sweep()
+    dt = time.perf_counter() - t0
+    ok = all(r["conservation_ok"] for r in rows if "conservation_ok" in r)
+    sc = max((r for r in rows if r.get("step_cost")),
+             key=lambda r: r["racks"])
+    return [{"name": "fabric_sweep",
+             "us_per_call": round(dt * 1e6 / max(len(rows), 1), 1),
+             "derived": (f"conservation_ok={ok} "
+                         f"vec_speedup@{sc['lanes']}lanes="
+                         f"{sc['vectorized_speedup']}x "
+                         f"sharded_speedup={sc['sharded_speedup_vs_scalar']}x")
+             }], rows
+
+
+if __name__ == "__main__":
+    print(run())

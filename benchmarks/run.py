@@ -11,11 +11,18 @@ detailed rows to experiments/bench/<name>.json.
     extrapolated saturation reaches >= 10,000 jobs (BENCH_fig10.json);
   * the migration-plane smoke: the batched pre-copy simulator must be
     >= 5x faster than the per-request scalar loop at 64 concurrent
-    migrations (bit-equal outcomes), and under contention — one shared
-    1 Gbit/s link, 8 simultaneous requests — alma-paper must beat
-    immediate on both total migration time and bytes (BENCH_table6.json).
+    migrations (bit-equal outcomes); the vectorized plane event loop must
+    be >= 3x faster than the kept per-lane reference at 64 in-flight
+    lanes; per-link byte conservation must hold on every link of the
+    multi-rack star fabric sweep (core oversubscription 1:1 -> 1:4); and
+    under contention — one shared 1 Gbit/s bottleneck, 8 simultaneous
+    requests — alma-paper must beat immediate on both total migration
+    time and bytes (BENCH_table6.json).
 
-Both emit their JSON at the repo root for the cross-PR perf trajectory.
+Both emit their JSON at the repo root for the cross-PR perf trajectory,
+schema-checked first (``check_bench_schema``) so a silently renamed key
+cannot break the trajectory. ``scripts/verify.sh`` chains tier-1 pytest
+with this smoke.
 """
 from __future__ import annotations
 
@@ -34,8 +41,37 @@ ALL = [
     "fig89_cycle_accuracy",
     "fig10_scalability",
     "fig11_gathering",
+    "fabric_sweep",
     "roofline",
 ]
+
+
+# -- BENCH_*.json schema sanity: the cross-PR perf trajectory breaks
+# silently if a key is renamed or dropped, so --quick refuses to emit a
+# payload that lost its contract ------------------------------------------
+BENCH_SCHEMAS = {
+    "BENCH_fig10.json": {
+        "rows": list, "speedup_at_1000": (int, float),
+        "tick_full_s_at_1000": (int, float),
+        "tick_steady_s_at_1000": (int, float),
+        "saturation_jobs": (int, float), "criteria": dict,
+    },
+    "BENCH_table6.json": {
+        "batch_vs_scalar_at_64": dict, "sweep_timing": list,
+        "contended_8x_shared_link": dict, "plane_event_loop": dict,
+        "fabric_sweep": list, "criteria": dict,
+    },
+}
+
+
+def check_bench_schema(name: str, payload: dict) -> None:
+    spec = BENCH_SCHEMAS[name]
+    for key, typ in spec.items():
+        assert key in payload, f"{name}: missing key {key!r}"
+        assert isinstance(payload[key], typ), \
+            f"{name}: {key!r} is {type(payload[key]).__name__}, want {typ}"
+    assert all(isinstance(v, bool) for v in payload["criteria"].values()), \
+        f"{name}: criteria must be booleans"
 
 
 def quick() -> None:
@@ -58,6 +94,7 @@ def quick() -> None:
         "criteria": {"speedup_10x": at_max["speedup"] >= 10.0,
                      "saturation_10k": fit["saturation_jobs"] >= 10_000},
     }
+    check_bench_schema("BENCH_fig10.json", payload)
     (ROOT / "BENCH_fig10.json").write_text(
         json.dumps(payload, indent=1, default=str))
     print("name,us_per_call,derived")
@@ -72,9 +109,12 @@ def quick() -> None:
 
 
 def quick_migration_plane() -> None:
-    """Migration-plane smoke: batched-simulator speedup + the contended
-    ALMA-vs-immediate gap on a shared 1 Gbit/s link."""
+    """Migration-plane smoke: batched-simulator speedup, the vectorized
+    event loop vs the per-lane reference at 64 lanes, the contended
+    ALMA-vs-immediate gap, and the multi-rack fabric conservation sweep."""
+    from benchmarks import fabric_sweep as fs
     from benchmarks import table6_benchmarks as t6
+    from benchmarks.fig11_gathering import _plane_step_cost
 
     # batched (M,) simulator vs the per-request scalar loop at 64 lanes;
     # the host is shared/noisy, so take the best of a few attempts
@@ -86,13 +126,34 @@ def quick_migration_plane() -> None:
         if best["speedup"] >= 5.0:
             break
 
+    # vectorized MigrationPlane.advance vs the kept per-lane scalar loop
+    # (fig11 plane_* measurement) — acceptance floor is 3x at 64 lanes
+    plane_vec = min(_plane_step_cost(64) for _ in range(3))
+    plane_scalar = min(_plane_step_cost(64, vectorized=False)
+                       for _ in range(3))
+    plane_speedup = plane_scalar / max(plane_vec, 1e-9)
+
     trad = t6._run_policy("immediate", 0)
     alma = t6._run_policy("alma-paper", 0)
     sweep_rows = t6.sweep(sizes=(1, 8, 64), with_policy_gap=False)
 
+    # multi-rack star fabric: per-link conservation at 1:1 -> 1:4 core
+    # oversubscription (a reduced sweep keeps --quick fast)
+    fabric_rows = fs.sweep(racks_list=(2, 4), lanes_list=(2, 8),
+                           oversubs=(1.0, 4.0))
+    conservation_ok = all(r["conservation_ok"] for r in fabric_rows
+                          if "conservation_ok" in r)
+    links_checked = sum(r.get("links_checked", 0) for r in fabric_rows)
+
     payload = {
         "batch_vs_scalar_at_64": best,
         "sweep_timing": sweep_rows,
+        "plane_event_loop": {
+            "vectorized_us_per_step_at_64": round(plane_vec, 1),
+            "scalar_us_per_step_at_64": round(plane_scalar, 1),
+            "speedup": round(plane_speedup, 2),
+        },
+        "fabric_sweep": fabric_rows,
         "contended_8x_shared_link": {
             "immediate": {k: v for k, v in trad.items()
                           if not isinstance(v, dict)},
@@ -105,26 +166,37 @@ def quick_migration_plane() -> None:
         },
         "criteria": {
             "batch_speedup_5x": best["speedup"] >= 5.0,
+            "plane_event_loop_3x": plane_speedup >= 3.0,
+            "fabric_conservation": conservation_ok,
             "alma_less_traffic": alma["traffic"] < trad["traffic"],
             "alma_less_time": alma["total_time"] < trad["total_time"],
         },
     }
+    check_bench_schema("BENCH_table6.json", payload)
     (ROOT / "BENCH_table6.json").write_text(
         json.dumps(payload, indent=1, default=str))
     print(f"table6_smoke,{best['batch_ms'] * 1e3},"
           f"batch_speedup@64={best['speedup']}x "
+          f"plane_vec_speedup@64={payload['plane_event_loop']['speedup']}x "
           f"traffic_red={payload['contended_8x_shared_link']['traffic_reduction_pct']}% "
           f"time_red={payload['contended_8x_shared_link']['total_time_reduction_pct']}%")
     assert best["speedup"] >= 5.0, \
         f"batched pre-copy simulator only {best['speedup']}x vs scalar loop"
+    assert plane_speedup >= 3.0, \
+        f"vectorized plane event loop only {plane_speedup:.2f}x vs " \
+        f"per-lane loop at 64 lanes"
+    assert conservation_ok, "per-link conservation violated in fabric sweep"
+    assert links_checked > 0
     assert trad["completed"] == 8 and alma["completed"] == 8, \
         (trad["completed"], alma["completed"])
     assert alma["traffic"] < trad["traffic"], \
         f"alma traffic {alma['traffic']} !< immediate {trad['traffic']}"
     assert alma["total_time"] < trad["total_time"], \
         f"alma time {alma['total_time']} !< immediate {trad['total_time']}"
-    print(f"QUICK OK: plane speedup {best['speedup']}x, contended "
-          f"traffic -{payload['contended_8x_shared_link']['traffic_reduction_pct']}%, "
+    print(f"QUICK OK: plane speedup {best['speedup']}x, event loop "
+          f"{plane_speedup:.1f}x, fabric links ok ({links_checked} checks), "
+          f"contended traffic "
+          f"-{payload['contended_8x_shared_link']['traffic_reduction_pct']}%, "
           f"time -{payload['contended_8x_shared_link']['total_time_reduction_pct']}%")
 
 

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the full pytest suite plus the benchmark smoke
+# (which refreshes and schema-checks BENCH_fig10.json / BENCH_table6.json).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python -m benchmarks.run --quick
+echo "verify.sh: OK"

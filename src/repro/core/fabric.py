@@ -1,0 +1,170 @@
+"""Sharded datacenter fabric — per-domain migration planes.
+
+At datacenter scale the fleet is not one flat migration network: hosts hang
+off per-rack access links joined by a core (``network.Topology.star`` /
+``multi_rack``), and two migrations interact only if their paths share a
+link. ``ShardedPlane`` exploits that: it partitions the in-flight lanes
+into *migration domains* — connected components of the "shares a link"
+relation — and runs one independent ``MigrationPlane`` event loop per
+domain.
+
+Why shard instead of one big plane:
+
+  * **event decoupling** — a round boundary in one rack's domain no longer
+    forces an event chunk (fair-share recompute + dirty resample) on every
+    other rack's lanes; per-step work scales with the busiest domain, not
+    the fleet.
+  * **structural isolation** — a domain's event loop sees exactly the
+    lanes it would see running alone, so migrations in disjoint domains
+    are bit-equal to running each domain by itself (asserted in
+    ``tests/test_fabric.py``). Core-link traffic is the only coupling:
+    a lane whose path crosses shared (core) links bridges the domains it
+    touches, which are then merged (``MigrationPlane._absorb``) and
+    advance as one until they drain.
+
+Domains are dynamic: they form at launch, merge when a cross-rack lane
+bridges them, and dissolve when their lanes drain (byte accounting is
+folded into the fabric's persistent per-link counters). The fabric
+presents the same surface as a single plane — ``launch`` / ``advance`` /
+``probe_bandwidth`` / ``link_bytes`` / ``last_shares`` — so ``FleetSim``
+and the LMCM's realized-bandwidth feedback are agnostic to the sharding;
+``probe_bandwidth`` computes the fair share against the intersecting
+domains only (disjoint domains cannot affect a new lane's share).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import network, strunk
+from repro.core.plane import MigrationPlane
+from repro.core.rates import RateSpec
+
+
+class ShardedPlane:
+    """Fabric of per-domain ``MigrationPlane`` event loops (same surface
+    as a single plane; see module docstring for the domain model)."""
+
+    def __init__(self, topology: network.Topology, *, vectorized: bool = True,
+                 **plane_kw):
+        self.topology = topology
+        self.caps = topology.capacities
+        self.vectorized = vectorized
+        self._plane_kw = plane_kw
+        self._fallback_bw = max(self.caps.values(), default=np.inf)
+        self.now = 0.0
+        self._domains: List[MigrationPlane] = []
+        self._pending: List[Tuple[object, strunk.MigrationOutcome]] = []
+        self._retired_link_bytes: Dict[str, float] = {}
+        # final shares of domains that dissolved during the MOST RECENT
+        # advance only — mirrors MigrationPlane.last_shares ("shares at
+        # the latest event boundary") without retaining every job ever run
+        self._dissolved_shares: Dict[str, float] = {}
+        self.merges = 0                  # domain-bridging events (telemetry)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def in_flight(self) -> int:
+        return sum(d.in_flight for d in self._domains)
+
+    @property
+    def domain_count(self) -> int:
+        return len(self._domains)
+
+    def jobs_in_flight(self) -> List[str]:
+        return [j for d in self._domains for j in d.jobs_in_flight()]
+
+    def domain_links(self) -> List[frozenset]:
+        """Link sets of the live domains (diagnostics / tests)."""
+        return [d.link_set for d in self._domains]
+
+    @property
+    def link_bytes(self) -> Dict[str, float]:
+        out = dict(self._retired_link_bytes)
+        for d in self._domains:
+            for l, b in d.link_bytes.items():
+                out[l] = out.get(l, 0.0) + b
+        return out
+
+    @property
+    def last_shares(self) -> Dict[str, float]:
+        """Fair shares at each live domain's latest event boundary (plus
+        the final shares of domains that drained in the last advance)."""
+        shares = dict(self._dissolved_shares)
+        for d in self._domains:
+            shares.update(d.last_shares)
+        return shares
+
+    def probe_bandwidth(self, src: str, dst: str, extra: int = 0) -> float:
+        """Fair-share bandwidth a NEW src->dst migration would realize,
+        computed against the domains its path intersects — lanes in
+        disjoint domains cannot affect the share, so the probe is
+        per-domain (the LMCM's ``bandwidth_probe`` wiring lands here)."""
+        path = self.topology.path(src, dst)
+        pset = frozenset(path)
+        paths = [p for d in self._domains if pset & d.link_set
+                 for p in d.paths_in_flight()]
+        paths += [path] * (extra + 1)
+        share = float(network.fair_share(paths, self.caps)[-1])
+        return share if np.isfinite(share) else self._fallback_bw
+
+    # -- lifecycle -----------------------------------------------------------
+    def _new_domain(self) -> MigrationPlane:
+        d = MigrationPlane(self.topology, vectorized=self.vectorized,
+                           **self._plane_kw)
+        self._domains.append(d)
+        return d
+
+    def launch(self, req, rate: RateSpec, now: float, *,
+               path: Optional[Sequence[str]] = None) -> None:
+        """Start executing ``req`` at ``now`` in the domain its path
+        belongs to — creating it, or merging the domains the path bridges
+        (e.g. a cross-rack lane joining two busy racks through the core).
+        ``rate`` follows the lane-registration API of ``core/rates.py``."""
+        p = tuple(path) if path is not None else \
+            self.topology.path(req.src, req.dst)
+        pset = frozenset(p)
+        if pset:
+            hits = [d for d in self._domains if pset & d.link_set]
+        else:
+            # unlinked lanes never contend; keep them in one side domain
+            hits = [d for d in self._domains if not d.link_set]
+        if not hits:
+            target = self._new_domain()
+        else:
+            target = hits[0]
+            for other in hits[1:]:
+                t = max(now, target.now, other.now)
+                self._pending.extend(target.advance(t))
+                self._pending.extend(other.advance(t))
+                target._absorb(other)
+                self._domains.remove(other)
+                self.merges += 1
+        target.launch(req, rate, now, path=p)
+        self.now = max(self.now, now)
+
+    def advance(self, until: float):
+        """Advance every domain's event loop to ``until`` (or drain);
+        returns completions across all domains (plus any produced by
+        launch-time catch-ups and merges). Drained domains dissolve —
+        their byte accounting folds into the fabric counters."""
+        finished = self._pending
+        self._pending = []
+        live: List[MigrationPlane] = []
+        self._dissolved_shares = {}
+        for d in self._domains:
+            finished.extend(d.advance(until))
+            if not np.isfinite(until):
+                self.now = max(self.now, d.now)
+            if d.in_flight:
+                live.append(d)
+            else:
+                for l, b in d.link_bytes.items():
+                    self._retired_link_bytes[l] = \
+                        self._retired_link_bytes.get(l, 0.0) + b
+                self._dissolved_shares.update(d.last_shares)
+        self._domains = live
+        if np.isfinite(until):
+            self.now = max(self.now, until)
+        return finished

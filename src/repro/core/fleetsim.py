@@ -7,14 +7,22 @@ pre-copy model sampled against the *time-varying* dirty rate, so a migration
 launched in an NLM phase genuinely costs more — which is what Tables 6/7
 measure.
 
-Execution is contention-aware: every migration the LMCM releases is handed
-to the migration plane (``core/plane.py``), which advances all in-flight
-transfers together and re-shares each network link max-min fairly at every
-round boundary (``core/network.py``). Simultaneous migrations therefore
+Execution is contention-aware and sharded: every migration the LMCM
+releases is handed to the fabric (``core/fabric.py``), which partitions
+in-flight transfers into per-access-link migration domains and advances
+each domain's event loop (``core/plane.py``) independently, re-sharing
+each network link max-min fairly at every round boundary
+(``core/network.py``). Simultaneous migrations on shared links therefore
 slow each other down — longer rounds, more dirtying per round, more bytes —
 which is exactly the congestion effect the paper's orchestrator exists to
-avoid. The LMCM's deadline/cost decisions read the plane's realized
+avoid, while disjoint domains advance without touching each other. The
+LMCM's deadline/cost decisions read the fabric's realized per-domain
 bandwidth through ``bandwidth_probe``.
+
+The fleet substrate defaults to ``Topology.star`` when a host ``Placement``
+is given (per-host access links joined through a core sized by
+``core_oversubscription``); without a placement it falls back to the
+paper's single shared migration link.
 
 Workload traces: phase sequences in the style of the paper's Table 3
 artificial cycles (CPU/MEM/IO/IDLE), each phase with characteristic load
@@ -27,14 +35,15 @@ one vectorized call (``PiecewiseRate.batch``) — the fast path of
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import characterize, network, strunk
 from repro.core.consolidation import Placement
+from repro.core.fabric import ShardedPlane
 from repro.core.orchestrator import LMCM, MigrationRequest
-from repro.core.plane import MigrationPlane
+from repro.core.rates import PiecewiseRate  # noqa: F401  (re-export)
 from repro.core.telemetry import FleetTelemetry, TelemetryBuffer
 
 # phase archetypes: load-index means (step_time, dirty_bytes, dirty_fraction,
@@ -55,73 +64,6 @@ PHASES = {
     "IDLE": dict(compute_util=0.03, hbm_util=0.05, dirty_rate=0.3e6,
                  label=characterize.IDLE),
 }
-
-
-class PiecewiseRate:
-    """Piecewise-constant cyclic rate r(t) backed by phase-end tables.
-
-    ``ends`` are cumulative phase end times, ``rates`` the per-phase value;
-    the pattern repeats every ``ends[-1]`` seconds, shifted by ``offset``.
-    Scalar calls and the vectorized ``batch`` path index the same tables
-    with the same float64 arithmetic, so they agree bit-for-bit — the
-    parity contract ``strunk.simulate_precopy_batch`` relies on.
-    """
-
-    def __init__(self, ends: Sequence[float], rates: Sequence[float],
-                 offset: float = 0.0):
-        self.ends = np.asarray(ends, np.float64)
-        self.rates = np.asarray(rates, np.float64)
-        self.cycle = float(self.ends[-1])
-        self.offset = float(offset)
-
-    def index_at(self, t: float) -> int:
-        tc = (t + self.offset) % self.cycle
-        i = int(np.searchsorted(self.ends, tc, side="right"))
-        return min(i, len(self.rates) - 1)
-
-    def __call__(self, t: float) -> float:
-        return float(self.rates[self.index_at(t)])
-
-    @staticmethod
-    def batch(lanes: Sequence["PiecewiseRate"]
-              ) -> Callable[[np.ndarray], np.ndarray]:
-        """One vectorized rate function over (M,) lanes: maps the (M,) time
-        array to (M,) rates in a single padded table lookup."""
-        m = len(lanes)
-        width = max(len(l.rates) for l in lanes)
-        ends = np.full((m, width), np.inf)
-        rates = np.zeros((m, width))
-        for i, l in enumerate(lanes):
-            n = len(l.rates)
-            ends[i, :n] = l.ends
-            rates[i, :n] = l.rates
-            rates[i, n:] = l.rates[-1]
-        cyc = np.asarray([l.cycle for l in lanes])
-        off = np.asarray([l.offset for l in lanes])
-        # flat-table lookup with persistent scratch: per-phase column
-        # compares (W is tiny) + in-place ufuncs beat a (M, W)
-        # broadcast+reduce by ~5x in numpy dispatch overhead — this sits on
-        # the batch simulator's per-round hot path. The returned array is a
-        # reused buffer: callers consume it before the next call.
-        cols = [np.ascontiguousarray(ends[:, k]) for k in range(width)]
-        flat = np.ascontiguousarray(rates.ravel())
-        row_off = np.arange(m, dtype=np.intp) * width
-        tc = np.empty(m)
-        idx = np.empty(m, np.intp)
-        cmp = np.empty(m, bool)
-        out = np.empty(m)
-
-        def fn(t: np.ndarray) -> np.ndarray:
-            np.add(t, off, out=tc)
-            np.mod(tc, cyc, out=tc)
-            np.copyto(idx, row_off)
-            for col in cols[:-1]:       # tc < ends[-1] always
-                np.greater_equal(tc, col, out=cmp)
-                np.add(idx, cmp, out=idx, casting="unsafe")
-            return flat.take(idx, out=out)
-        fn.vectorized = True
-        fn.nonneg = bool(np.all(rates >= 0.0))
-        return fn
 
 
 @dataclass
@@ -214,11 +156,14 @@ class FleetSim:
     — one (J, F) record per step, one gather per surveillance tick — and the
     LMCM's batched surveillance engine refreshes every stale cycle fit in a
     single pipeline per step (see ``core/surveillance.py``). Migrations the
-    LMCM releases run on a shared ``MigrationPlane``: each sampling period
-    the plane's event loop advances every in-flight pre-copy together,
-    re-sharing link bandwidth max-min fairly at round boundaries. By default
-    all hosts share one migration link at ``bandwidth`` — the paper's
-    dedicated 1 Gbit/s migration network.
+    LMCM releases run on the sharded fabric (``ShardedPlane``): each
+    sampling period every migration domain's event loop advances its
+    in-flight pre-copies together, re-sharing link bandwidth max-min
+    fairly at round boundaries; disjoint domains advance independently.
+    The substrate is a ``Topology.star`` over the placement's hosts when a
+    placement is given (access links at ``bandwidth``, core sized by
+    ``core_oversubscription``), else the paper's single dedicated
+    1 Gbit/s migration network.
     """
 
     def __init__(self, jobs: Sequence[SimJob], *, policy: str,
@@ -227,7 +172,8 @@ class FleetSim:
                  warmup_s: float = 0.0, seed: int = 0,
                  topology: Optional[network.Topology] = None,
                  placement: Optional[Placement] = None,
-                 min_share_frac: float = 0.0):
+                 min_share_frac: float = 0.0,
+                 core_oversubscription: float = 1.0):
         self.jobs = {j.job_id: j for j in jobs}
         self.rng = np.random.default_rng(seed)
         self.lmcm = LMCM(policy=policy, max_wait=max_wait,
@@ -235,9 +181,23 @@ class FleetSim:
                          sample_period=sample_period,
                          min_share_frac=min_share_frac)
         self.bandwidth = bandwidth
-        self.topology = topology or network.Topology.single_link(bandwidth)
+        if topology is None:
+            if placement is not None:
+                # the default fleet substrate: a star fabric — one access
+                # link per host at the migration-network speed, joined by a
+                # core sized at (n_hosts x access) / oversubscription (1:1
+                # leaves the core non-binding; raise the ratio to study an
+                # oversubscribed spine)
+                hosts = list(placement.hosts)
+                topology = network.Topology.star(
+                    hosts, bandwidth,
+                    core_capacity=len(hosts) * bandwidth
+                    / max(core_oversubscription, 1e-9))
+            else:
+                topology = network.Topology.single_link(bandwidth)
+        self.topology = topology
         self.placement = placement
-        self.plane = MigrationPlane(self.topology)
+        self.plane = ShardedPlane(self.topology)
         self.lmcm.bandwidth_probe = lambda req, extra=0: \
             self.plane.probe_bandwidth(req.src, req.dst, extra)
         self.dt = sample_period
@@ -319,7 +279,10 @@ class FleetSim:
                 launch_info[id(req)] = (job.trace.phase_at(self.now) != "MEM",
                                         self.now)
                 first_launch = min(first_launch, self.now)
-                self.plane.launch(req, job.trace.dirty_rate, self.now,
+                # register the lane with its PiecewiseRate table so the
+                # plane's vectorized event loop accrues its dirty bytes
+                # through the batched lookup (see core/rates.py)
+                self.plane.launch(req, job.trace.rate_table, self.now,
                                   path=req.path or None)
             self.now += self.dt
             # one sampling period of contended execution: every in-flight

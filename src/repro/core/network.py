@@ -1,31 +1,37 @@
-"""Shared-link migration network model — the contention side of the plane.
+"""Migration-fabric network model — topology, domains, and max-min sharing.
 
 The paper's testbed moves every live migration over one dedicated 1 Gbit/s
 migration network (§6.1); its central claim is that *simultaneous*
 migrations congest that network and degrade applications (§1, Tables 6-7).
 He & Buyya's taxonomy (arXiv:2112.02593) and Wang et al.'s SDN migration
 planning (arXiv:1412.4980) both single out bandwidth sharing among
-concurrent migrations as the first-order effect an orchestrator must model.
-This module provides that model:
+concurrent migrations as the first-order effect an orchestrator must model
+— and both argue the model must be topology-aware once the fleet outgrows
+a single flat link. This module provides that model:
 
-  * ``Topology`` — hosts mapped to the links their migration traffic
-    traverses (a shared migration network, per-host access links, or a
-    star with a core uplink), each link with a fixed capacity in bytes/s.
+  * ``Topology`` — hosts mapped to the *access* links their migration
+    traffic traverses, plus optional *shared* links (a core uplink) that
+    are crossed only when a transfer leaves its access domain.  Factories:
+    ``single_link`` (the paper's shared migration network), ``star``
+    (per-host access links + core), ``multi_rack`` (per-rack access links
+    + core — the sharded-fabric substrate).
   * ``fair_share`` — max-min fair bandwidth allocation across concurrent
     transfers via progressive filling (water-filling): repeatedly find the
     most-contended link, freeze every flow crossing it at that link's equal
     share, and redistribute the slack to the remaining flows.
+    ``fair_share_dense`` is the same algorithm over a precomputed link x
+    lane incidence matrix — the migration plane's per-event hot path.
 
-The migration plane (``core/plane.py``) re-runs ``fair_share`` at every
-round boundary of every in-flight migration, so a migration's bandwidth is
-a function of what else is moving — exactly the coupling the seed's
-fire-and-forget executor ignored (every migration ran at full link speed
-no matter how many were in flight).
+Migration domains: two transfers interact iff their paths share a link.
+Because shared (core) links are only on *cross-domain* paths, transfers
+confined to disjoint access links form independent domains — the sharded
+execution fabric (``core/fabric.py``) advances each domain's event loop
+separately, and a domain's trajectory is bit-equal to running it alone.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Mapping, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -39,35 +45,54 @@ class Link:
 class Topology:
     """Host -> migration-link mapping with per-link capacities.
 
-    ``path(src, dst)`` returns the tuple of link ids a migration from
-    ``src`` to ``dst`` traverses; the plane charges the transfer against
-    every link on the path. Hosts absent from ``host_links`` fall back to
+    ``host_links`` maps each host to its access links; ``shared_links``
+    (e.g. a core uplink) are traversed only when source and destination
+    have *different* access links — intra-domain transfers never touch
+    the core.  Hosts absent from ``host_links`` fall back to
     ``default_path`` (for the common "one shared migration network" model
     this means every migration, tagged or not, contends on the same link).
+
+    ``path(src, dst)`` returns the tuple of link ids a migration from
+    ``src`` to ``dst`` traverses; the plane charges the transfer against
+    every link on the path.
     """
 
     def __init__(self, links: Sequence[Link],
                  host_links: Dict[str, Tuple[str, ...]] | None = None,
-                 default_path: Tuple[str, ...] = ()):
+                 default_path: Tuple[str, ...] = (),
+                 shared_links: Tuple[str, ...] = ()):
         self.links: Dict[str, Link] = {l.link_id: l for l in links}
         self.host_links = dict(host_links or {})
         self.default_path = tuple(default_path)
+        self.shared_links = tuple(shared_links)
         for h, ls in self.host_links.items():
             for l in ls:
                 if l not in self.links:
                     raise KeyError(f"host {h!r} references unknown link {l!r}")
+        for l in self.shared_links:
+            if l not in self.links:
+                raise KeyError(f"unknown shared link {l!r}")
 
     @property
     def capacities(self) -> Dict[str, float]:
         return {i: l.capacity for i, l in self.links.items()}
 
+    def access_of(self, host: str) -> Tuple[str, ...]:
+        """The host's access links — its migration-domain signature."""
+        return tuple(l for l in self.host_links.get(host, self.default_path)
+                     if l not in self.shared_links)
+
     def path(self, src: str, dst: str) -> Tuple[str, ...]:
-        """Links traversed by a src->dst migration (order-stable dedup)."""
+        """Links traversed by a src->dst migration (order-stable dedup).
+        Shared links are included only when the endpoints live in
+        different access domains."""
+        a_src, a_dst = self.access_of(src), self.access_of(dst)
         out: List[str] = []
-        for host in (src, dst):
-            for l in self.host_links.get(host, self.default_path):
-                if l not in out:
-                    out.append(l)
+        seq = (a_src + (self.shared_links if a_src != a_dst else ())
+               + a_dst)
+        for l in seq:
+            if l not in out:
+                out.append(l)
         if not out:
             out = list(self.default_path)
         return tuple(out)
@@ -82,13 +107,38 @@ class Topology:
     @classmethod
     def star(cls, hosts: Sequence[str], access_capacity: float,
              core_capacity: float | None = None) -> "Topology":
-        """Per-host access links, optionally through a shared core link."""
+        """Per-host access links, optionally through a shared core link.
+        Cross-host transfers traverse src access -> core -> dst access;
+        same-host transfers stay on the host's access link."""
         links = [Link(f"acc:{h}", access_capacity) for h in hosts]
         host_links = {h: (f"acc:{h}",) for h in hosts}
+        shared: Tuple[str, ...] = ()
         if core_capacity is not None:
             links.append(Link("core", core_capacity))
-            host_links = {h: (f"acc:{h}", "core") for h in hosts}
-        return cls(links, host_links)
+            shared = ("core",)
+        return cls(links, host_links, shared_links=shared)
+
+    @classmethod
+    def multi_rack(cls, racks: Union[int, Mapping[str, Sequence[str]]],
+                   access_capacity: float,
+                   core_capacity: float | None = None, *,
+                   hosts_per_rack: int = 4) -> "Topology":
+        """Rack-level access (ToR) links plus an optional shared core —
+        the sharded-fabric substrate. ``racks`` is either a mapping
+        ``{rack_id: [host, ...]}`` or an int (auto-named ``r{i}h{j}``).
+        Intra-rack migrations contend only on their rack link; cross-rack
+        migrations additionally cross the core."""
+        if isinstance(racks, int):
+            racks = {f"r{i}": [f"r{i}h{j}" for j in range(hosts_per_rack)]
+                     for i in range(racks)}
+        links = [Link(f"acc:{r}", access_capacity) for r in racks]
+        host_links = {h: (f"acc:{r}",)
+                      for r, hs in racks.items() for h in hs}
+        shared: Tuple[str, ...] = ()
+        if core_capacity is not None:
+            links.append(Link("core", core_capacity))
+            shared = ("core",)
+        return cls(links, host_links, shared_links=shared)
 
 
 def fair_share(paths: Sequence[Sequence[str]],
@@ -126,3 +176,70 @@ def fair_share(paths: Sequence[Sequence[str]],
                 frozen[i] = True
     rates[~frozen] = np.inf                 # flows crossing no link
     return rates
+
+
+class DenseFairShare:
+    """Reusable max-min fair-share solver over a fixed (L, M) incidence.
+
+    The same progressive-filling algorithm as ``fair_share`` — identical
+    bottleneck selection order (first minimum in link order); per-link
+    sums run over the dense lane axis, so results can differ from the
+    sparse version by float summation order (ULPs) only when three or
+    more flows tie. All scratch arrays are preallocated and every step is
+    an in-place ufunc or a matmul into a buffer: this sits on the
+    migration plane's per-event hot path, where numpy dispatch and
+    temporaries dominate at fleet lane counts. The returned rates array
+    is a reused buffer — callers consume it before the next call. Lanes
+    crossing no link get ``inf``.
+    """
+
+    def __init__(self, incidence: np.ndarray, capacities: np.ndarray):
+        self.inc = np.ascontiguousarray(incidence, np.float64)
+        self.caps = np.asarray(capacities, np.float64)
+        n_links, m = self.inc.shape
+        self.rates = np.empty(m)
+        self._live = np.empty(m)           # 1.0 while unfrozen
+        self._unfrozen = np.empty(m, bool)
+        self._mask = np.empty(m, bool)
+        self._n_live = np.empty(n_links)
+        self._used = np.empty(n_links)
+        self._share = np.empty(n_links)
+        self._empty = np.empty(n_links, bool)
+        self._occupied = np.empty(n_links, bool)
+
+    def __call__(self) -> np.ndarray:
+        inc, caps, rates, live = self.inc, self.caps, self.rates, self._live
+        if inc.shape[0] == 0:           # no links at all: every lane is
+            rates.fill(np.inf)          # unconstrained (the caller's
+            return rates                # fallback bandwidth applies)
+        rates.fill(0.0)
+        live.fill(1.0)
+        while True:
+            np.matmul(inc, live, out=self._n_live)
+            np.matmul(inc, rates, out=self._used)
+            np.subtract(caps, self._used, out=self._share)
+            np.maximum(self._share, 0.0, out=self._share)
+            np.less_equal(self._n_live, 0.0, out=self._empty)
+            np.logical_not(self._empty, out=self._occupied)
+            np.divide(self._share, self._n_live, out=self._share,
+                      where=self._occupied)
+            np.copyto(self._share, np.inf, where=self._empty)
+            l = int(np.argmin(self._share))
+            s = float(self._share[l])
+            if not np.isfinite(s):
+                break
+            np.greater(live, 0.0, out=self._unfrozen)
+            np.greater(inc[l], 0.0, out=self._mask)
+            np.logical_and(self._mask, self._unfrozen, out=self._mask)
+            np.copyto(rates, s, where=self._mask)
+            np.copyto(live, 0.0, where=self._mask)
+        np.greater(live, 0.0, out=self._unfrozen)
+        np.copyto(rates, np.inf, where=self._unfrozen)
+        return rates
+
+
+def fair_share_dense(incidence: np.ndarray, capacities: np.ndarray
+                     ) -> np.ndarray:
+    """One-shot ``DenseFairShare`` (tests / callers without a cached
+    incidence); the plane holds a solver instance instead."""
+    return DenseFairShare(incidence, capacities)().copy()

@@ -41,7 +41,7 @@ dilute every in-flight transfer below a share floor (the
 from __future__ import annotations
 
 import heapq
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -65,6 +65,11 @@ class MigrationRequest:
     decision: str = "pending"           # pending|scheduled|running|done|cancelled
     scheduled_at: float = 0.0
     outcome: Optional[strunk.MigrationOutcome] = None
+    # generation of this request's LIVE heap entry: cancel+resubmit leaves
+    # the old entry in the heap, and decision alone cannot tell the stale
+    # entry from the live one (both say "scheduled") — ``due`` only honors
+    # the entry whose sequence number matches
+    heap_gen: int = field(default=-1, repr=False, compare=False)
 
 
 class LMCM:
@@ -184,6 +189,14 @@ class LMCM:
         return float(candidates[ok][0])
 
     # -- queue machinery -------------------------------------------------------
+    def _push(self, req: MigrationRequest, when: float) -> None:
+        """(Re)enter the heap: stamps the request with a fresh entry
+        generation so any older entry for the same request goes stale."""
+        req.scheduled_at = when
+        self._seq += 1
+        req.heap_gen = self._seq
+        heapq.heappush(self.queue, (when, self._seq, req))
+
     def submit(self, req: MigrationRequest, now: float) -> None:
         wait = self.decide(req, now)
         if wait < 0:
@@ -191,13 +204,14 @@ class LMCM:
             self.log.append(req)
             return
         req.decision = "scheduled"
-        req.scheduled_at = now + wait
-        heapq.heappush(self.queue, (req.scheduled_at, self._seq, req))
-        self._seq += 1
+        self._push(req, now + wait)
 
     def cancel(self, req: MigrationRequest) -> None:
         """Withdraw a request (e.g. the consolidation plan was revised).
-        Heap entries are left in place; ``due`` skips non-scheduled pops."""
+        Heap entries are left in place; ``due`` skips non-scheduled pops,
+        and the entry generation protects a cancelled-then-resubmitted
+        request from its own stale entry (firing early off the old entry,
+        or being dropped when the old entry is consumed first)."""
         if req.decision in ("pending", "scheduled"):
             req.decision = "cancelled"
             self.log.append(req)
@@ -209,9 +223,9 @@ class LMCM:
         self.running = [r for r in self.running if r.decision == "running"]
         while (self.queue and self.queue[0][0] <= now
                and len(self.running) + len(out) < self.max_concurrent):
-            _, _, req = heapq.heappop(self.queue)
-            if req.decision != "scheduled":
-                continue            # cancelled after scheduling: stale entry
+            _, gen, req = heapq.heappop(self.queue)
+            if req.decision != "scheduled" or gen != req.heap_gen:
+                continue            # cancelled or superseded: stale entry
             # contention gate: if launching now would realize less than
             # min_share_frac of the nominal link speed, defer one sampling
             # period (but never past max_wait, and never when idle)
@@ -221,10 +235,7 @@ class LMCM:
                     <= req.created_at + self.max_wait):
                 if (self.effective_bandwidth(req, extra=len(out))
                         < self.min_share_frac * self.bandwidth):
-                    req.scheduled_at = now + self.sample_period
-                    heapq.heappush(self.queue, (req.scheduled_at, self._seq,
-                                                req))
-                    self._seq += 1
+                    self._push(req, now + self.sample_period)
                     continue
             # re-check suitability at fire time (cycle may have drifted)
             if self.policy != "immediate":
@@ -235,10 +246,7 @@ class LMCM:
                     continue
                 if wait > self.sample_period and now + wait <= \
                         req.created_at + self.max_wait:
-                    req.scheduled_at = now + wait
-                    heapq.heappush(self.queue, (req.scheduled_at, self._seq,
-                                                req))
-                    self._seq += 1
+                    self._push(req, now + wait)
                     continue
             req.decision = "running"
             out.append(req)

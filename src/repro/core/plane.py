@@ -20,19 +20,39 @@ shared-link network model (``core/network.py``):
 
 ``advance(until)`` is the event loop: compute fair shares, find the
 earliest round completion, move every lane forward by that chunk, settle
-completed rounds, repeat. ``FleetSim`` drives it one sampling period at a
-time; benchmarks drive it to drain. Per-link byte counters support the
-conservation invariant (bytes through a link <= capacity x elapsed time)
-and the link-utilization columns of the table6/7 benchmarks.
+completed rounds, repeat.
+
+Two executions of each event chunk:
+
+  * **vectorized** (default) — lanes register their dirty-rate spec with a
+    ``rates.RateBank`` (``PiecewiseRate`` tables, constants, or plain
+    callables; see ``core/rates.py`` for the lane-registration API), so
+    dirty-byte accrual is ONE padded table lookup per chunk; link shares
+    come from ``network.fair_share_dense`` over a cached link x lane
+    incidence matrix; per-link byte counters are one matrix-vector
+    product. No O(lanes) Python inside the event loop.
+  * **scalar reference** (``vectorized=False``) — the original per-lane
+    loop, kept as the executable specification. Uncontended lanes are
+    bit-equal between the two (and to ``simulate_precopy_reference``);
+    contended multi-link cases agree to float summation order.
+
+``FleetSim`` drives the plane one sampling period at a time (through the
+sharded fabric, ``core/fabric.py``); benchmarks drive it to drain.
+Per-link byte counters support the conservation invariant (bytes through a
+link <= capacity x elapsed time) and the link-utilization columns of the
+table6/7 benchmarks. ``_absorb`` merges another plane's lanes in — the
+fabric uses it when a new lane's path bridges two previously independent
+migration domains.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import network, strunk
+from repro.core.rates import RateBank, RateSpec, as_rate_table
 
 _COPY, _STOP = 0, 1
 
@@ -40,7 +60,8 @@ _COPY, _STOP = 0, 1
 @dataclass
 class _LaneMeta:
     req: object                          # orchestrator.MigrationRequest
-    rate_fn: Optional[Callable[[float], float]]
+    spec: RateSpec                       # raw rate spec (table/const/callable)
+    rate_fn: Optional[object]            # scalar callable view of ``spec``
     path: Tuple[str, ...]
     t_start: float
 
@@ -52,11 +73,13 @@ class MigrationPlane:
                  page: int = strunk.PAGE,
                  max_rounds: int = strunk.XEN_MAX_ROUNDS,
                  stop_dirty_pages: int = strunk.XEN_STOP_DIRTY_PAGES,
-                 stop_total_factor: float = strunk.XEN_STOP_TOTAL_FACTOR):
+                 stop_total_factor: float = strunk.XEN_STOP_TOTAL_FACTOR,
+                 vectorized: bool = True):
         self.topology = topology
         self.caps = topology.capacities
         self.max_rounds = max_rounds
         self.stop_total_factor = stop_total_factor
+        self.vectorized = vectorized
         self._thresh = float(stop_dirty_pages) * page
         self._fallback_bw = max(self.caps.values(), default=np.inf)
         self.now = 0.0
@@ -74,8 +97,19 @@ class MigrationPlane:
         self._down = np.zeros(0)
         self._phase = np.zeros(0, np.int8)
         self._reason = np.zeros(0, np.int8)
-        self.link_bytes: Dict[str, float] = {}
-        self.last_shares: Dict[str, float] = {}
+        # vectorized-chunk banks, rebuilt lazily on membership change
+        self._banks_stale = True
+        self._rates: Optional[RateBank] = None
+        self._link_order: List[str] = []
+        self._inc = np.zeros((0, 0))         # (L, M) float incidence
+        self._caps_vec = np.zeros(0)
+        self._link_vec = np.zeros(0)         # per-chunk byte accumulator
+        self._job_ids: List[str] = []
+        # persistent accounting
+        self._link_bytes: Dict[str, float] = {}
+        self._share_jobs: List[str] = []
+        self._share_vec = np.zeros(0)
+        self._link_set_cache: Optional[frozenset] = frozenset()
 
     # -- introspection -------------------------------------------------------
     @property
@@ -84,6 +118,32 @@ class MigrationPlane:
 
     def jobs_in_flight(self) -> List[str]:
         return [m.req.job_id for m in self._meta]
+
+    def paths_in_flight(self) -> List[Tuple[str, ...]]:
+        """Network path of every in-flight lane (the fabric's probe input)."""
+        return [m.path for m in self._meta]
+
+    @property
+    def link_set(self) -> frozenset:
+        """Links any in-flight lane touches — the plane's migration domain.
+        Cached (the fabric reads it per launch/probe across every domain);
+        launches extend it incrementally, drops invalidate it."""
+        if self._link_set_cache is None:
+            self._link_set_cache = frozenset(
+                l for m in self._meta for l in m.path)
+        return self._link_set_cache
+
+    @property
+    def link_bytes(self) -> Dict[str, float]:
+        """Bytes moved per link so far (completed + in-flight chunks)."""
+        self._fold_link_vec()
+        return dict(self._link_bytes)
+
+    @property
+    def last_shares(self) -> Dict[str, float]:
+        """Fair-share bandwidth per job at the most recent event boundary."""
+        return {j: float(s) for j, s in zip(self._share_jobs,
+                                            self._share_vec)}
 
     def probe_bandwidth(self, src: str, dst: str, extra: int = 0) -> float:
         """Fair-share bandwidth a NEW src->dst migration would receive right
@@ -97,18 +157,28 @@ class MigrationPlane:
         return share if np.isfinite(share) else self._fallback_bw
 
     # -- lifecycle -----------------------------------------------------------
-    def launch(self, req, rate_fn: Optional[Callable[[float], float]],
-               now: float, *, path: Optional[Sequence[str]] = None) -> None:
-        """Start executing ``req`` at time ``now`` (>= plane time)."""
+    def launch(self, req, rate: RateSpec, now: float, *,
+               path: Optional[Sequence[str]] = None) -> None:
+        """Start executing ``req`` at time ``now`` (>= plane time).
+
+        ``rate`` is the lane's dirty-rate spec — a ``rates.PiecewiseRate``
+        table (preferred: the vectorized event loop accrues its dirty bytes
+        through one batched lookup), a constant, an object exposing
+        ``rate_table``, a plain callable of absolute time (compatibility:
+        sampled per lane per event), or None.
+        """
         if now > self.now:
             self._backlog.extend(self.advance(now))
-        if rate_fn is not None and not callable(rate_fn):
-            const = float(rate_fn)
-            rate_fn = lambda _t: const
+        if rate is None or callable(rate):
+            rate_fn = rate               # PiecewiseRate is itself callable
+        else:
+            # constants and objects exposing ``rate_table`` normalize to a
+            # table, which doubles as the scalar-path callable
+            rate = rate_fn = as_rate_table(rate)
         p = tuple(path) if path is not None else \
             self.topology.path(req.src, req.dst)
         v = float(req.v_bytes)
-        self._meta.append(_LaneMeta(req, rate_fn, p, now))
+        self._meta.append(_LaneMeta(req, rate, rate_fn, p, now))
         self._v = np.append(self._v, v)
         self._rem = np.append(self._rem, v)
         self._round = np.append(self._round, v)
@@ -118,6 +188,51 @@ class MigrationPlane:
         self._down = np.append(self._down, 0.0)
         self._phase = np.append(self._phase, _COPY)
         self._reason = np.append(self._reason, strunk.REASON_MAX_ROUNDS)
+        self._banks_stale = True
+        if self._link_set_cache is not None:
+            self._link_set_cache = self._link_set_cache | frozenset(p)
+
+    def _fold_link_vec(self) -> None:
+        """Flush the vectorized per-chunk link accumulator into the
+        persistent per-link byte dict."""
+        if self._link_vec.any():
+            for l, b in zip(self._link_order, self._link_vec):
+                self._link_bytes[l] = self._link_bytes.get(l, 0.0) + float(b)
+            self._link_vec[:] = 0.0
+
+    def _rebuild_banks(self) -> None:
+        """Re-derive the rate bank, link incidence, caps vector, and the
+        event-chunk scratch buffers from the current lane membership
+        (lazily, after launches/drops/merges)."""
+        self._fold_link_vec()
+        self._rates = RateBank([m.spec for m in self._meta])
+        order = list(dict.fromkeys(l for m in self._meta for l in m.path))
+        self._link_order = order
+        row = {l: k for k, l in enumerate(order)}
+        n = len(self._meta)
+        self._inc = np.zeros((len(order), n))
+        for i, m in enumerate(self._meta):
+            for l in dict.fromkeys(m.path):
+                self._inc[row[l], i] = 1.0
+        self._caps_vec = np.asarray([self.caps[l] for l in order])
+        self._link_vec = np.zeros(len(order))
+        self._job_ids = [m.req.job_id for m in self._meta]
+        # fair shares are a function of lane MEMBERSHIP only (paths + link
+        # capacities — not of per-round state), so one solve per rebuild
+        # covers every chunk until the next launch/drop/merge
+        shares = network.DenseFairShare(self._inc, self._caps_vec)()
+        np.copyto(shares, self._fallback_bw, where=~np.isfinite(shares))
+        self._share_cache = shares
+        # per-chunk scratch: the event loop below is all in-place ufuncs
+        self._b_tdone = np.empty(n)
+        self._b_mask = np.empty(n, bool)
+        self._b_complete = np.empty(n, bool)
+        self._b_copy = np.empty(n, bool)
+        self._b_f1 = np.empty(n)
+        self._b_f2 = np.empty(n)
+        self._b_moved = np.empty(n)
+        self._b_ltmp = np.empty(len(order))
+        self._banks_stale = False
 
     def advance(self, until: float):
         """Run the event loop to ``until`` (or until drained); returns the
@@ -127,29 +242,77 @@ class MigrationPlane:
             self._backlog
         self._backlog = []
         while self._meta and self.now < until:
-            shares = network.fair_share([m.path for m in self._meta],
-                                        self.caps)
-            shares = np.where(np.isfinite(shares), shares, self._fallback_bw)
-            t_done = np.where(
-                self._rem <= 0.0, 0.0,
-                np.divide(self._rem, shares,
-                          out=np.full_like(self._rem, np.inf),
-                          where=shares > 0))
-            dt = min(float(t_done.min()), until - self.now)
-            complete = t_done <= dt * (1 + 1e-12)
+            if self.vectorized:
+                if self._banks_stale:
+                    self._rebuild_banks()
+                # membership-cached fair shares + time-to-completion
+                mask, t_done = self._b_mask, self._b_tdone
+                shares = self._share_cache
+                t_done.fill(np.inf)
+                np.greater(shares, 0.0, out=mask)
+                np.divide(self._rem, shares, out=t_done, where=mask)
+                np.less_equal(self._rem, 0.0, out=mask)
+                np.copyto(t_done, 0.0, where=mask)
+            else:
+                shares = network.fair_share([m.path for m in self._meta],
+                                            self.caps)
+                shares = np.where(np.isfinite(shares), shares,
+                                  self._fallback_bw)
+                t_done = np.where(
+                    self._rem <= 0.0, 0.0,
+                    np.divide(self._rem, shares,
+                              out=np.full_like(self._rem, np.inf),
+                              where=shares > 0))
+            window = until - self.now
+            t_min = float(t_done.min())
+            # a chunk truncated by the window must land the clock on
+            # ``until`` EXACTLY (now + (until - now) != until in floats):
+            # the fabric merges domains only at equal event times
+            truncated = not (t_min < window)
+            dt = window if truncated else t_min
             mid = self.now + 0.5 * dt
-            for i, meta in enumerate(self._meta):
-                if self._phase[i] == _COPY and meta.rate_fn is not None:
-                    self._acc[i] += max(0.0, float(meta.rate_fn(mid))) * dt
-                moved = float(self._rem[i]) if complete[i] \
-                    else float(shares[i]) * dt
-                for l in meta.path:
-                    self.link_bytes[l] = self.link_bytes.get(l, 0.0) + moved
-            self._down = self._down + np.where(self._phase == _STOP, dt, 0.0)
-            self._rem = np.where(complete, 0.0, self._rem - shares * dt)
-            self.now += dt
-            self.last_shares = {m.req.job_id: float(s)
-                                for m, s in zip(self._meta, shares)}
+            if self.vectorized:
+                complete, copying = self._b_complete, self._b_copy
+                np.less_equal(t_done, dt * (1 + 1e-12), out=complete)
+                np.equal(self._phase, _COPY, out=copying)
+                f1, f2, moved = self._b_f1, self._b_f2, self._b_moved
+                # dirty accrual: max(0, r)*dt, exactly zeroed off-copy lanes
+                r = self._rates.sample(mid, copying)
+                np.maximum(r, 0.0, out=f1)
+                np.multiply(f1, dt, out=f1)
+                np.multiply(f1, copying, out=f1)
+                np.add(self._acc, f1, out=self._acc)
+                # per-link byte counters: one matvec over the incidence
+                np.multiply(shares, dt, out=moved)
+                np.copyto(moved, self._rem, where=complete)
+                np.matmul(self._inc, moved, out=self._b_ltmp)
+                np.add(self._link_vec, self._b_ltmp, out=self._link_vec)
+                # downtime accrues on stop-and-copy lanes (= not copying)
+                np.subtract(1.0, copying, out=f2)
+                np.multiply(f2, dt, out=f2)
+                np.add(self._down, f2, out=self._down)
+                np.multiply(shares, dt, out=f1)
+                np.subtract(self._rem, f1, out=self._rem)
+                np.copyto(self._rem, 0.0, where=complete)
+                self._share_jobs = self._job_ids
+            else:
+                complete = t_done <= dt * (1 + 1e-12)
+                for i, meta in enumerate(self._meta):
+                    if self._phase[i] == _COPY and meta.rate_fn is not None:
+                        self._acc[i] += \
+                            max(0.0, float(meta.rate_fn(mid))) * dt
+                    moved = float(self._rem[i]) if complete[i] \
+                        else float(shares[i]) * dt
+                    for l in meta.path:
+                        self._link_bytes[l] = \
+                            self._link_bytes.get(l, 0.0) + moved
+                self._down = self._down + np.where(self._phase == _STOP,
+                                                   dt, 0.0)
+                self._rem = np.where(complete, 0.0,
+                                     self._rem - shares * dt)
+                self._share_jobs = [m.req.job_id for m in self._meta]
+            self.now = until if truncated else self.now + dt
+            self._share_vec = shares
             drop: List[int] = []
             for i in np.flatnonzero(complete):
                 out = self._settle(int(i))
@@ -162,10 +325,13 @@ class MigrationPlane:
                 for name in ("_v", "_rem", "_round", "_acc", "_sent",
                              "_rounds", "_down", "_phase", "_reason"):
                     setattr(self, name, getattr(self, name)[keep])
+                self._banks_stale = True
+                self._link_set_cache = None
         # an infinite drain must not poison the clock: time only ever
         # fast-forwards to a finite target
         if not self._meta and self.now < until and np.isfinite(until):
             self.now = until
+        self._fold_link_vec()
         return finished
 
     def _settle(self, i: int) -> Optional[strunk.MigrationOutcome]:
@@ -198,3 +364,25 @@ class MigrationPlane:
             bytes_sent=float(self._sent[i]),
             rounds=int(self._rounds[i]),
             stop_reason=strunk.STOP_REASONS[int(self._reason[i])])
+
+    def _absorb(self, other: "MigrationPlane") -> None:
+        """Merge ``other``'s in-flight lanes into this plane — both planes
+        must sit at the same event time (the fabric advances them to a
+        common ``now`` before bridging two migration domains)."""
+        if other.now != self.now:
+            raise ValueError(f"cannot absorb plane at t={other.now} "
+                             f"into plane at t={self.now}")
+        other._fold_link_vec()
+        self._fold_link_vec()
+        self._meta.extend(other._meta)
+        for name in ("_v", "_rem", "_round", "_acc", "_sent",
+                     "_rounds", "_down", "_phase", "_reason"):
+            setattr(self, name, np.concatenate(
+                [getattr(self, name), getattr(other, name)]))
+        for l, b in other._link_bytes.items():
+            self._link_bytes[l] = self._link_bytes.get(l, 0.0) + b
+        self._backlog.extend(other._backlog)
+        other._meta, other._backlog = [], []
+        self._banks_stale = True
+        self._link_set_cache = None
+        other._link_set_cache = None

@@ -285,11 +285,22 @@ def expected_cost(v_mem: float, bandwidth: float, dirty_rate: DirtyRate,
                             start_time=start_time).bytes_sent
 
 
-def expected_cost_batch(v_mem: float, bandwidth: float,
-                        dirty_rate: BatchDirtyRate,
-                        start_times: np.ndarray) -> np.ndarray:
-    """Vectorized 'alma-plus' window scan: bytes sent for one migration
-    hypothetically started at each of (M,) candidate moments."""
-    m = len(start_times)
-    return simulate_precopy_batch(np.full(m, v_mem), bandwidth, dirty_rate,
-                                  start_time=start_times).bytes_sent
+def expected_cost_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
+                        start_times, *, full: bool = False):
+    """Vectorized expected migration cost (total bytes sent) over (M,)
+    hypothetical lanes. Two callers, same math:
+
+      * the 'alma-plus' window scan — ONE migration (scalar ``v_mem`` /
+        ``bandwidth``) started at each of (M,) candidate moments;
+      * the consolidation planner's packing score — (M,) planned
+        migrations with per-lane sizes and per-lane *contended fair-share*
+        bandwidths, all started at the consolidation event time (pass
+        ``full=True`` for the whole ``BatchMigrationOutcome`` — predicted
+        times tie-break packings whose byte bills are equal).
+    """
+    start = np.atleast_1d(np.asarray(start_times, np.float64))
+    m = max(start.shape[0], np.atleast_1d(np.asarray(v_mem)).shape[0])
+    out = simulate_precopy_batch(
+        np.broadcast_to(np.asarray(v_mem, np.float64), (m,)), bandwidth,
+        dirty_rate, start_time=np.broadcast_to(start, (m,)))
+    return out if full else out.bytes_sent

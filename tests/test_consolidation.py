@@ -1,6 +1,7 @@
 """Consolidation planner: FFD packing, the O(1) job->host index behind
 ``Placement.host_of``, and src/dst tagging of the migration plan."""
 import numpy as np
+import pytest
 
 from repro.core import consolidation as cs
 
@@ -61,6 +62,87 @@ def test_overfull_placement_keeps_jobs_in_place():
     new_p, plan = cs.consolidate_ffd(cs.Placement(hosts))
     assert plan == []
     assert new_p.host_of("big") == "a" and new_p.host_of("huge") == "b"
+
+
+def test_contention_aware_packing_prefers_rack_local_moves():
+    """Two packings tie at 2 hosts, but classic FFD funnels four
+    cross-rack transfers through the core while the rack-affinity
+    candidate consolidates with ONE intra-rack move — the topology-scored
+    planner must pick the cheap plan."""
+    from repro.core import network
+    from repro.core.rates import PiecewiseRate
+    hosts = {
+        "r0h0": cs.Host("r0h0", 2.0, {"j1": 1.0}),
+        "r0h1": cs.Host("r0h1", 2.0, {"j2": 1.0}),
+        "r1h0": cs.Host("r1h0", 2.0, {"j3": 1.0, "j4": 1.0}),
+        "r1h1": cs.Host("r1h1", 2.0),
+    }
+    topo = network.Topology.multi_rack(
+        {"r0": ["r0h0", "r0h1"], "r1": ["r1h0", "r1h1"]},
+        125e6, core_capacity=125e6)
+    sb = {j: 1e9 for j in ("j1", "j2", "j3", "j4")}
+    rates = {j: PiecewiseRate([60.0], [50e6]) for j in sb}
+
+    classic_p, classic_plan = cs.consolidate_ffd(
+        cs.Placement({k: cs.Host(h.host_id, h.capacity, dict(h.jobs))
+                      for k, h in hosts.items()}), state_bytes=sb)
+    best_p, best_plan = cs.consolidate_ffd(
+        cs.Placement(hosts), state_bytes=sb, topology=topo,
+        dirty_rates=rates)
+
+    assert cs.hosts_used(best_p) == cs.hosts_used(classic_p) == 2
+    assert len(classic_plan) == 4       # the blind plan crosses the core
+    assert len(best_plan) == 1
+    (req,) = best_plan
+    assert topo.access_of(req.src) == topo.access_of(req.dst)
+    blind = cs.plan_cost(classic_plan, topo, dirty_rates=rates)
+    smart = cs.plan_cost(best_plan, topo, dirty_rates=rates)
+    assert smart["bytes"] < blind["bytes"] / 4
+    # index integrity of the winning placement
+    for h in best_p.hosts.values():
+        for j in h.jobs:
+            assert best_p.host_of(j) == h.host_id
+
+
+def test_plan_cost_empty_and_uncontended():
+    from repro.core import network
+    topo = network.Topology.single_link(125e6)
+    assert cs.plan_cost([], topo)["bytes"] == 0.0
+    from repro.core.orchestrator import MigrationRequest
+    one = [MigrationRequest("j", 0.0, 1e9, src="a", dst="b")]
+    cost = cs.plan_cost(one, topo)
+    # zero dirty rate: exactly V bytes at the full link share
+    assert cost["bytes"] == pytest.approx(1e9)
+    assert cost["shares"][0] == 125e6
+
+
+def test_topology_scoring_never_worsens_host_count():
+    """The contended score is lexicographic: host count stays primary, so
+    the topology-aware planner consolidates exactly as well as classic
+    FFD on every seed."""
+    from repro.core import network
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n_racks = int(rng.integers(2, 4))
+        racks = {f"r{r}": [f"r{r}h{k}" for k in range(3)]
+                 for r in range(n_racks)}
+        topo = network.Topology.multi_rack(racks, 125e6,
+                                           core_capacity=250e6)
+        hosts = {}
+        for r, hs in racks.items():
+            for h in hs:
+                jobs = {f"{h}_j{i}": 1.0
+                        for i in range(int(rng.integers(0, 3)))}
+                hosts[h] = cs.Host(h, 4.0, jobs)
+        sb = {j: 5e8 for h in hosts.values() for j in h.jobs}
+        p1, _ = cs.consolidate_ffd(
+            cs.Placement({k: cs.Host(h.host_id, h.capacity, dict(h.jobs))
+                          for k, h in hosts.items()}), state_bytes=sb)
+        p2, plan2 = cs.consolidate_ffd(cs.Placement(hosts), state_bytes=sb,
+                                       topology=topo)
+        assert cs.hosts_used(p2) == cs.hosts_used(p1)
+        for req in plan2:
+            assert req.src and req.dst and req.src != req.dst
 
 
 def test_host_of_scales_constant_time():

@@ -1,0 +1,281 @@
+"""Sharded-fabric invariants: domain isolation, merging, and the
+vectorized event loop's parity with the scalar reference plane.
+
+The load-bearing contracts:
+
+  * migrations confined to disjoint access-link domains are BIT-EQUAL to
+    running each domain alone (sharding changes nothing but wall-clock);
+  * core-link contention with unconstrained access links reproduces the
+    single-shared-link results exactly (the paper's testbed is the
+    degenerate one-domain fabric);
+  * the vectorized plane is bit-equal to the kept scalar reference loop
+    on uncontended lanes, and to float summation order under contention;
+  * per-link byte conservation holds on every link of a multi-rack sweep.
+"""
+import numpy as np
+import pytest
+
+from repro.core import network, strunk
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import FleetSim, SimJob, WorkloadTrace
+from repro.core.orchestrator import MigrationRequest
+from repro.core.plane import MigrationPlane
+
+
+def _tuples(done):
+    return {r.job_id: (o.total_time, o.downtime, o.bytes_sent, o.rounds,
+                       o.stop_reason) for r, o in done}
+
+
+def _trace(seed=0):
+    return WorkloadTrace([("MEM", 60), ("CPU", 60)], 120)
+
+
+def _rack_topo(access=125e6, core=125e6):
+    return network.Topology.multi_rack(
+        {"r0": ["r0h0", "r0h1"], "r1": ["r1h0", "r1h1"]},
+        access, core_capacity=core)
+
+
+def _intra_rack_reqs(rack, n, rng):
+    return [MigrationRequest(f"{rack}j{i}", 0.0,
+                             float(rng.uniform(0.5e9, 2e9)),
+                             src=f"{rack}h0", dst=f"{rack}h1")
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# domain isolation
+# ---------------------------------------------------------------------------
+def test_disjoint_domains_bit_equal_to_isolated_runs():
+    """Two racks, only intra-rack migrations: the fabric must produce
+    outcomes bit-equal to running each rack's lanes on a fabric of its
+    own — and must actually shard them into two domains."""
+    topo = _rack_topo()
+    tr = _trace()
+    rng = np.random.default_rng(1)
+    reqs = {r: _intra_rack_reqs(r, 3, rng) for r in ("r0", "r1")}
+
+    both = ShardedPlane(topo)
+    for r in ("r0", "r1"):
+        for q in reqs[r]:
+            both.launch(q, tr.rate_table, 0.0)
+    assert both.domain_count == 2
+    assert sorted(map(sorted, both.domain_links())) == \
+        [["acc:r0"], ["acc:r1"]]
+    together = _tuples(both.advance(np.inf))
+
+    for r in ("r0", "r1"):
+        alone = ShardedPlane(topo)
+        for q in reqs[r]:
+            alone.launch(q, tr.rate_table, 0.0)
+        solo = _tuples(alone.advance(np.inf))
+        for job, tup in solo.items():
+            assert together[job] == tup, (job, tup, together[job])
+
+
+def test_core_contention_reproduces_single_link():
+    """Cross-rack lanes with unconstrained access links contend only on
+    the core — bit-equal to the same lanes on the paper's single shared
+    migration link of the core's capacity."""
+    cap = 125e6
+    topo = _rack_topo(access=1e18, core=cap)
+    tr = _trace()
+    rng = np.random.default_rng(2)
+    sizes = [float(rng.uniform(0.5e9, 2e9)) for _ in range(6)]
+
+    fabric = ShardedPlane(topo)
+    flat = ShardedPlane(network.Topology.single_link(cap))
+    for i, v in enumerate(sizes):
+        fabric.launch(MigrationRequest(f"x{i}", 0.0, v,
+                                       src="r0h0", dst="r1h0"),
+                      tr.rate_table, 0.0)
+        flat.launch(MigrationRequest(f"x{i}", 0.0, v), tr.rate_table, 0.0)
+    assert fabric.domain_count == 1     # the core couples everything
+    assert _tuples(fabric.advance(np.inf)) == _tuples(flat.advance(np.inf))
+    # the core carried every byte; each (unconstrained) access link too
+    lb = fabric.link_bytes
+    total = lb["core"]
+    assert total == pytest.approx(lb["acc:r0"] + 0.0, rel=1e-12)
+    assert total == pytest.approx(flat.link_bytes["migration-net"],
+                                  rel=1e-12)
+
+
+def test_cross_rack_lane_merges_domains():
+    topo = _rack_topo()
+    tr = _trace()
+    rng = np.random.default_rng(3)
+    plane = ShardedPlane(topo)
+    for r in ("r0", "r1"):
+        for q in _intra_rack_reqs(r, 2, rng):
+            plane.launch(q, tr.rate_table, 0.0)
+    assert plane.domain_count == 2
+    plane.advance(5.0)
+    # a cross-rack migration bridges both racks through the core
+    plane.launch(MigrationRequest("bridge", 0.0, 1e9,
+                                  src="r0h1", dst="r1h0"),
+                 tr.rate_table, 5.0)
+    assert plane.domain_count == 1
+    assert plane.merges == 1
+    done = _tuples(plane.advance(np.inf))
+    assert set(done) == {"r0j0", "r0j1", "r1j0", "r1j1", "bridge"}
+    # conservation on every link
+    elapsed = plane.now
+    for l, b in plane.link_bytes.items():
+        assert b <= topo.links[l].capacity * elapsed * (1 + 1e-9), (l, b)
+
+
+def test_link_bytes_survive_domain_dissolve():
+    topo = _rack_topo()
+    plane = ShardedPlane(topo)
+    plane.launch(MigrationRequest("j", 0.0, 1e9, src="r0h0", dst="r0h1"),
+                 2e6, 0.0)
+    (req, out), = plane.advance(np.inf)
+    assert plane.domain_count == 0      # drained domains dissolve
+    assert plane.link_bytes["acc:r0"] == pytest.approx(out.bytes_sent)
+    assert plane.in_flight == 0
+
+
+def test_unlinked_lane_runs_at_fallback_bandwidth():
+    """A lane whose path resolves to no links (hosts unknown to a star
+    topology) is unconstrained: both plane modes must run it at the
+    fallback bandwidth instead of crashing on an empty incidence."""
+    topo = network.Topology.star(["h0", "h1"], 125e6)
+    ref = strunk.simulate_precopy_reference(1e9, 125e6, 2e6)
+    for cls in (ShardedPlane, MigrationPlane):
+        plane = cls(topo)
+        plane.launch(MigrationRequest("ghost", 0.0, 1e9), 2e6, 0.0)
+        (_, out), = plane.advance(np.inf)
+        assert (out.total_time, out.bytes_sent) == \
+            (ref.total_time, ref.bytes_sent)
+
+
+def test_probe_is_per_domain():
+    """Lanes saturating rack r0 must not dilute the probed share of an
+    intra-r1 migration — but a cross-rack probe sees them through the
+    shared links it would traverse."""
+    cap = 125e6
+    topo = _rack_topo(access=cap, core=cap)
+    plane = ShardedPlane(topo)
+    for i in range(4):
+        plane.launch(MigrationRequest(f"j{i}", 0.0, 1e12,
+                                      src="r0h0", dst="r0h1"), 1e6, 0.0)
+    assert plane.probe_bandwidth("r0h0", "r0h1") == pytest.approx(cap / 5)
+    # r1 is an independent domain: full access-link speed
+    assert plane.probe_bandwidth("r1h0", "r1h1") == pytest.approx(cap)
+    # a cross-rack lane shares acc:r0 with the four in-flight lanes
+    assert plane.probe_bandwidth("r0h0", "r1h0") == pytest.approx(cap / 5)
+
+
+# ---------------------------------------------------------------------------
+# vectorized event loop vs the scalar reference plane
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("v,rate,kw", [
+    (1.5e9, 2e6, {}),                       # dirty_low
+    (1e9, 0.6 * 125e6, {"max_rounds": 5}),  # max_rounds
+    (1e9, 150e6, {}),                       # total_cap
+])
+def test_vectorized_uncontended_bit_equals_reference(v, rate, kw):
+    """The acceptance contract: the vectorized plane's uncontended lane is
+    bit-equal to BOTH the scalar-reference plane and the Strunk loop."""
+    outs = {}
+    for vec in (True, False):
+        plane = MigrationPlane(network.Topology.single_link(125e6),
+                               vectorized=vec, **kw)
+        plane.launch(MigrationRequest("j", 0.0, v), rate, 0.0)
+        (_, out), = plane.advance(np.inf)
+        outs[vec] = (out.total_time, out.downtime, out.bytes_sent,
+                     out.rounds, out.stop_reason)
+    ref = strunk.simulate_precopy_reference(v, 125e6, rate, **kw)
+    assert outs[True] == outs[False] == \
+        (ref.total_time, ref.downtime, ref.bytes_sent, ref.rounds,
+         ref.stop_reason)
+
+
+def test_vectorized_contended_matches_scalar_plane():
+    """8 lanes on one shared link, cyclic tables, stepped advances: the
+    vectorized loop tracks the per-lane reference loop exactly (one
+    contended link involves no cross-link float reassociation)."""
+    tr = _trace()
+    res = {}
+    for vec in (True, False):
+        plane = MigrationPlane(network.Topology.single_link(125e6),
+                               vectorized=vec)
+        rng = np.random.default_rng(7)
+        for j in range(8):
+            plane.launch(MigrationRequest(f"j{j}", 0.0,
+                                          float(rng.uniform(0.5e9, 2e9))),
+                         tr.rate_table, float(rng.uniform(0.0, 20.0)))
+        done = {}
+        t = 20.0
+        while plane.in_flight:
+            t += 1.0
+            done.update(_tuples(plane.advance(t)))
+        res[vec] = (done, plane.link_bytes)
+    assert res[True][0] == res[False][0]
+    for l, b in res[True][1].items():
+        assert b == pytest.approx(res[False][1][l], rel=1e-9)
+
+
+def test_vectorized_multilink_close_to_scalar_plane():
+    """Cross-rack contention exercises multi-link fair sharing, where the
+    dense and sparse solvers may differ by summation order only."""
+    topo = _rack_topo()
+    tr = _trace()
+    res = {}
+    for vec in (True, False):
+        plane = MigrationPlane(topo, vectorized=vec)
+        rng = np.random.default_rng(11)
+        for j in range(6):
+            src = f"r{j % 2}h0"
+            dst = f"r{(j + 1) % 2}h1"
+            plane.launch(MigrationRequest(f"j{j}", 0.0,
+                                          float(rng.uniform(0.5e9, 2e9)),
+                                          src=src, dst=dst),
+                         tr.rate_table, 0.0)
+        res[vec] = {j: t for j, t in _tuples(plane.advance(np.inf)).items()}
+    for j, tup in res[True].items():
+        np.testing.assert_allclose(tup[:3], res[False][j][:3], rtol=1e-9)
+        assert tup[3:] == res[False][j][3:]
+
+
+def test_sharded_equals_monolithic_single_domain():
+    """When every lane shares one link there is exactly one domain — the
+    fabric must be a transparent wrapper over a single plane."""
+    tr = _trace()
+    res = {}
+    for cls in (ShardedPlane, MigrationPlane):
+        plane = cls(network.Topology.single_link(125e6))
+        rng = np.random.default_rng(5)
+        for j in range(6):
+            plane.launch(MigrationRequest(f"j{j}", 0.0,
+                                          float(rng.uniform(0.5e9, 2e9))),
+                         tr.rate_table, 0.0)
+        res[cls.__name__] = _tuples(plane.advance(np.inf))
+    assert res["ShardedPlane"] == res["MigrationPlane"]
+
+
+# ---------------------------------------------------------------------------
+# FleetSim on the default star substrate
+# ---------------------------------------------------------------------------
+def test_fleetsim_star_default_conserves_every_link():
+    from repro.core.consolidation import Host, Placement
+    from repro.core.fleetsim import table3_traces
+    traces = table3_traces(phase_s=60.0)
+    jobs = [SimJob(j, tr, 1e9) for j, tr in traces.items()]
+    hosts = {f"s{i}": Host(f"s{i}", 1.0, {j.job_id: 1.0})
+             for i, j in enumerate(jobs)}
+    hosts["sink"] = Host("sink", float(len(jobs)))
+    sim = FleetSim(jobs, policy="immediate", warmup_s=60.0,
+                   max_concurrent=8, seed=0, placement=Placement(hosts))
+    # the default substrate is a star over the placement's hosts
+    assert "acc:sink" in sim.topology.links and "core" in sim.topology.links
+    plan = [MigrationRequest(j.job_id, sim.now + 2.0, j.v_bytes, dst="sink")
+            for j in jobs]
+    res = sim.run_with_plan(plan, horizon_s=3000.0)
+    assert len(res.per_job) == len(jobs)
+    caps = sim.topology.capacities
+    for l, b in res.link_bytes.items():
+        assert b <= caps[l] * res.makespan * (1 + 1e-9), (l, b)
+    # every job's bytes crossed its own access link and the sink's
+    assert res.link_bytes["acc:sink"] == pytest.approx(res.total_bytes)

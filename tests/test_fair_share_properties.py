@@ -1,0 +1,133 @@
+"""Property-based max-min invariants for ``network.fair_share``.
+
+Over random topologies (random link capacities, random multi-link paths):
+
+  * feasibility — no link carries more than its capacity;
+  * max-min optimality — every flow crosses a saturated link on which its
+    rate is maximal (so no flow can be increased without decreasing some
+    flow of smaller-or-equal rate on that link);
+  * permutation invariance — shuffling the flow order permutes the rates
+    identically (the allocation is a function of the multiset of paths).
+
+Hypothesis drives the search when installed (``_hypothesis_compat``
+degrades the ``@given`` tests to skips otherwise); the ``_seeded``
+variants run the same invariants over a fixed random sweep so clean
+containers still execute them.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import network
+
+LINKS = [f"L{i}" for i in range(6)]
+
+
+def _check_feasible(paths, caps, rates):
+    for l, cap in caps.items():
+        used = sum(r for r, p in zip(rates, paths) if l in p)
+        assert used <= cap * (1 + 1e-9), (l, used, cap)
+
+
+def _check_max_min(paths, caps, rates):
+    """Max-min optimality: each flow has a bottleneck — a saturated link
+    it crosses where no other flow gets a strictly larger rate."""
+    for r, p in zip(rates, paths):
+        if not p:
+            assert np.isinf(r)
+            continue
+        bottlenecked = False
+        for l in p:
+            used = sum(q for q, pp in zip(rates, paths) if l in pp)
+            saturated = used >= caps[l] * (1 - 1e-9)
+            is_max = all(q <= r * (1 + 1e-9)
+                         for q, pp in zip(rates, paths) if l in pp)
+            if saturated and is_max:
+                bottlenecked = True
+                break
+        assert bottlenecked, (r, p, rates)
+
+
+def _check_permutation(paths, caps, rates, rng):
+    perm = rng.permutation(len(paths))
+    permuted = network.fair_share([paths[i] for i in perm], caps)
+    np.testing.assert_allclose(permuted, rates[perm], rtol=1e-9)
+
+
+def _random_case(rng):
+    caps = {l: float(rng.uniform(0.5, 50.0)) for l in LINKS}
+    n_flows = int(rng.integers(1, 12))
+    paths = [tuple(rng.choice(LINKS, size=rng.integers(1, 4),
+                              replace=False))
+             for _ in range(n_flows)]
+    if rng.random() < 0.2:
+        paths.append(())                # an unconstrained flow
+    return paths, caps
+
+
+# ---------------------------------------------------------------------------
+# seeded sweep — always runs, hypothesis or not
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_max_min_invariants_seeded(seed):
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        paths, caps = _random_case(rng)
+        rates = network.fair_share(paths, caps)
+        finite = [r for r, p in zip(rates, paths) if p]
+        assert all(r > 0 and np.isfinite(r) for r in finite)
+        _check_feasible(paths, caps, rates)
+        _check_max_min(paths, caps, rates)
+        _check_permutation(paths, caps, rates, rng)
+
+
+def test_dense_solver_same_invariants_seeded():
+    rng = np.random.default_rng(99)
+    for _ in range(25):
+        paths, caps = _random_case(rng)
+        order = sorted({l for p in paths for l in p})
+        inc = np.zeros((len(order), len(paths)))
+        for i, p in enumerate(paths):
+            for l in p:
+                inc[order.index(l), i] = 1.0
+        rates = network.fair_share_dense(
+            inc, np.asarray([caps[l] for l in order]))
+        _check_feasible(paths, caps, rates)
+        _check_max_min(paths, caps, rates)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis search (skipped cleanly when the package is absent)
+# ---------------------------------------------------------------------------
+if HAS_HYPOTHESIS:
+    path_strategy = st.lists(
+        st.lists(st.sampled_from(LINKS), min_size=0, max_size=4,
+                 unique=True).map(tuple),
+        min_size=1, max_size=14)
+    caps_strategy = st.fixed_dictionaries(
+        {l: st.floats(min_value=0.5, max_value=50.0) for l in LINKS})
+else:                                    # inert placeholders for @given args
+    path_strategy = caps_strategy = None
+
+
+@settings(max_examples=200, deadline=None)
+@given(paths=path_strategy, caps=caps_strategy)
+def test_no_link_over_capacity(paths, caps):
+    rates = network.fair_share(paths, caps)
+    _check_feasible(paths, caps, rates)
+
+
+@settings(max_examples=200, deadline=None)
+@given(paths=path_strategy, caps=caps_strategy)
+def test_every_flow_bottlenecked(paths, caps):
+    rates = network.fair_share(paths, caps)
+    _check_max_min(paths, caps, rates)
+
+
+@settings(max_examples=100, deadline=None)
+@given(paths=path_strategy, caps=caps_strategy,
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_permutation_invariance(paths, caps, seed):
+    rates = network.fair_share(paths, caps)
+    _check_permutation(paths, caps, rates, np.random.default_rng(seed))

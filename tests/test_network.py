@@ -68,8 +68,48 @@ def test_single_link_topology_paths():
 def test_star_topology_paths():
     topo = network.Topology.star(["h0", "h1", "h2"], 10.0, core_capacity=15.0)
     assert topo.path("h0", "h1") == ("acc:h0", "core", "acc:h1")
-    # same-host migration doesn't double-charge its access link
-    assert topo.path("h0", "h0") == ("acc:h0", "core")
+    # an intra-domain migration never touches the shared core, and doesn't
+    # double-charge its access link
+    assert topo.path("h0", "h0") == ("acc:h0",)
+    # a coreless star still shares nothing between distinct hosts
+    flat = network.Topology.star(["h0", "h1"], 10.0)
+    assert flat.path("h0", "h1") == ("acc:h0", "acc:h1")
+
+
+def test_multi_rack_topology_paths():
+    topo = network.Topology.multi_rack(2, 10.0, core_capacity=15.0,
+                                       hosts_per_rack=2)
+    # intra-rack: only the rack's ToR link
+    assert topo.path("r0h0", "r0h1") == ("acc:r0",)
+    # cross-rack: src ToR -> core -> dst ToR
+    assert topo.path("r0h0", "r1h1") == ("acc:r0", "core", "acc:r1")
+    assert topo.access_of("r1h0") == ("acc:r1",)
+    named = network.Topology.multi_rack({"a": ["x"], "b": ["y"]}, 5.0,
+                                        core_capacity=3.0)
+    assert named.path("x", "y") == ("acc:a", "core", "acc:b")
+
+
+def test_fair_share_dense_matches_sparse():
+    rng = np.random.default_rng(7)
+    links = [f"L{i}" for i in range(5)]
+    caps = {l: float(rng.uniform(1, 20)) for l in links}
+    for _ in range(30):
+        paths = [tuple(rng.choice(links, size=rng.integers(1, 4),
+                                  replace=False))
+                 for _ in range(rng.integers(1, 12))]
+        sparse = network.fair_share(paths, caps)
+        order: list = []
+        for p in paths:
+            for l in p:
+                if l not in order:
+                    order.append(l)
+        inc = np.zeros((len(order), len(paths)))
+        for i, p in enumerate(paths):
+            for l in p:
+                inc[order.index(l), i] = 1.0
+        dense = network.fair_share_dense(
+            inc, np.asarray([caps[l] for l in order]))
+        np.testing.assert_allclose(dense, sparse, rtol=1e-12)
 
 
 def test_topology_rejects_unknown_link():

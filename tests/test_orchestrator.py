@@ -101,6 +101,48 @@ def test_cancelled_after_scheduling_never_fires():
     assert keep.decision == "running"
 
 
+def test_cancel_then_resubmit_same_burst():
+    """Regression: a request cancelled and re-requested within the same
+    burst must fire exactly once, at the RE-REQUESTED time — the stale
+    heap entry from the first submit must neither fire it early nor
+    consume/drop the live entry."""
+    lmcm = LMCM(policy="immediate", max_concurrent=8)
+    req = MigrationRequest("flip", 0.0, 1e9)
+    lmcm.submit(req, 0.0)               # entry A at t=0
+    lmcm.cancel(req)
+    req.decision = "pending"            # plan revised again: re-request
+    lmcm.submit(req, 5.0)               # entry B at t=5
+    assert req.decision == "scheduled" and req.scheduled_at == 5.0
+    # entry A (t=0) is due now, but it is stale: nothing may fire early
+    assert lmcm.due(1.0) == []
+    assert req.decision == "scheduled"
+    # at t=5 the live entry fires — exactly once
+    fired = lmcm.due(5.0)
+    assert [r.job_id for r in fired] == ["flip"]
+    assert req.decision == "running"
+    lmcm.finish(req, None)
+    assert lmcm.due(10.0) == []         # no duplicate from the stale entry
+
+
+def test_cancel_resubmit_later_entry_not_dropped():
+    """The mirror ordering: first submit schedules LATE, the resubmit
+    schedules EARLY — popping the early live entry must not be confused
+    by the late stale one remaining in the heap."""
+    lmcm = LMCM(policy="immediate", max_concurrent=8)
+    req = MigrationRequest("flip", 0.0, 1e9)
+    lmcm.submit(req, 0.0)
+    # force the first entry far into the future, as a postponement would
+    lmcm.queue.clear()
+    lmcm._push(req, 100.0)
+    lmcm.cancel(req)
+    req.decision = "pending"
+    lmcm.submit(req, 2.0)               # live entry at t=2
+    fired = lmcm.due(3.0)
+    assert [r.job_id for r in fired] == ["flip"]
+    lmcm.finish(req, None)
+    assert lmcm.due(200.0) == []        # stale late entry is inert
+
+
 def test_contended_fleet_alma_beats_immediate():
     """>=8 simultaneous requests over one shared 1 Gbit/s link: ALMA's
     postponement de-correlates both the dirty phases AND the link
