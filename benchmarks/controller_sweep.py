@@ -1,0 +1,187 @@
+"""Adaptive-concurrency sweep — static gate vs controller vs immediate.
+
+The PR 2/3 sweeps showed the saturation regime (>= 16 concurrent lanes on
+a shared link): the link, not the migration moment, becomes the bound.
+This benchmark measures what the adaptive concurrency controller
+(``core/controller.py``) buys there: on a multi-rack fabric with an
+oversubscribed core (1:2 -> 1:4), a single simultaneous burst of 8+
+migration requests (per-rack intra-rack lanes plus a ring of cross-rack
+lanes) is released through three concurrency policies —
+
+  * ``immediate``  — every request launches the moment it is due
+    (``min_share_frac = 0``, no controller): the fire-and-forget baseline;
+  * ``static``     — the ``min_share_frac`` share-floor gate (the PR 2
+    fallback policy, cumulative within a tick);
+  * ``adaptive``   — the defer-k controller minimizing predicted total
+    contended bytes per migration domain.
+
+Each cell drains the burst to completion and records measured total
+transferred bytes, summed migration time, and makespan. The acceptance
+contract (ISSUE 4): adaptive's measured bytes <= static's on every cell,
+strictly lower on the saturation cells (>= 16 lanes). ``benchmarks.run
+--quick`` asserts that on a reduced grid.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import network
+from repro.core.controller import AdaptiveConcurrencyController
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import PAPER_BANDWIDTH
+from repro.core.orchestrator import LMCM, MigrationRequest
+from repro.core.rates import PiecewiseRate
+
+ACCESS = PAPER_BANDWIDTH                  # 1 Gbit/s ToR links
+MODES = ("immediate", "static", "adaptive")
+
+
+def _topology(racks: int, oversub: float) -> network.Topology:
+    return network.Topology.multi_rack(
+        racks, ACCESS, core_capacity=racks * ACCESS / oversub,
+        hosts_per_rack=2)
+
+
+def _burst(racks: int, lanes_per_rack: int, rng: np.random.Generator
+           ) -> tuple:
+    """One simultaneous consolidation-style burst: ``lanes_per_rack``
+    intra-rack requests per rack plus one cross-rack lane per rack, all
+    created at t=0, with cyclic IO/CPU dirty-rate tables de-phased across
+    the fleet (the contended-fleet scenario of Tables 6/7)."""
+    reqs: List[MigrationRequest] = []
+    rates: Dict[str, PiecewiseRate] = {}
+    for r in range(racks):
+        for i in range(lanes_per_rack):
+            reqs.append(MigrationRequest(
+                f"r{r}j{i}", 0.0, float(rng.uniform(0.5e9, 1.5e9)),
+                src=f"r{r}h0", dst=f"r{r}h1"))
+    for c in range(racks):
+        reqs.append(MigrationRequest(
+            f"x{c}", 0.0, float(rng.uniform(0.5e9, 1.5e9)),
+            src=f"r{c}h0", dst=f"r{(c + 1) % racks}h0"))
+    for i, req in enumerate(reqs):
+        rates[req.job_id] = PiecewiseRate(
+            [60.0, 120.0], [12e6, 3e6], offset=120.0 * i / len(reqs))
+    return reqs, rates
+
+
+def run_cell(racks: int, lanes_per_rack: int, oversub: float, mode: str,
+             seed: int = 0, *, max_wait: float = 3600.0,
+             horizon_s: float = 4000.0) -> Dict:
+    """Drain one burst under one concurrency policy; measure the bill."""
+    assert mode in MODES
+    topo = _topology(racks, oversub)
+    plane = ShardedPlane(topo)
+    reqs, rates = _burst(racks, lanes_per_rack,
+                         np.random.default_rng(seed))
+    lmcm = LMCM(policy="immediate", max_wait=max_wait,
+                max_concurrent=len(reqs) + 1, bandwidth=ACCESS,
+                sample_period=1.0,
+                min_share_frac=0.5 if mode == "static" else 0.0)
+    lmcm.bandwidth_probe = lambda req, extra=0, pending=(): \
+        plane.probe_bandwidth(req.src, req.dst, extra, pending=pending)
+    lmcm.path_capacity = lambda req: \
+        plane.path_capacity(req.src, req.dst)
+    if mode == "adaptive":
+        lmcm.controller = AdaptiveConcurrencyController(
+            plane, rate_of=lambda r: rates[r.job_id], defer_s=1.0)
+    for req in reqs:
+        req.path = topo.path(req.src, req.dst)
+        lmcm.submit(req, 0.0)
+    now, outs = 0.0, []
+    t0 = time.perf_counter()
+    while (lmcm.queue or lmcm.running or plane.in_flight) \
+            and now < horizon_s:
+        for req in lmcm.due(now):
+            plane.launch(req, rates[req.job_id], now, path=req.path)
+        now += 1.0
+        for req, out in plane.advance(now):
+            lmcm.finish(req, out)
+            outs.append(out)
+    wall = time.perf_counter() - t0
+    caps = topo.capacities
+    return {
+        "racks": racks,
+        "lanes_per_rack": lanes_per_rack,
+        "core_oversubscription": oversub,
+        "lanes": len(reqs),
+        "mode": mode,
+        "completed": len(outs),
+        "total_bytes_GB": round(sum(o.bytes_sent for o in outs) / 1e9, 4),
+        "sum_time_s": round(sum(o.total_time for o in outs), 2),
+        "makespan_s": round(now, 1),
+        "conservation_ok": all(
+            b <= caps[l] * now * (1 + 1e-9)
+            for l, b in plane.link_bytes.items()),
+        "wall_s": round(wall, 3),
+    }
+
+
+def sweep(racks_list: Sequence[int] = (2, 4),
+          lanes_list: Sequence[int] = (4, 8),
+          oversubs: Sequence[float] = (2.0, 4.0),
+          seed: int = 0) -> List[Dict]:
+    """The contended grid: every cell is 8+ simultaneous requests; cells
+    with >= 16 lanes are the saturation regime of the PR 2/3 sweeps."""
+    rows: List[Dict] = []
+    for racks in racks_list:
+        for lpr in lanes_list:
+            for ov in oversubs:
+                cell = {m: run_cell(racks, lpr, ov, m, seed) for m in MODES}
+                merged = {k: cell["immediate"][k]
+                          for k in ("racks", "lanes_per_rack",
+                                    "core_oversubscription", "lanes")}
+                for m in MODES:
+                    merged[f"{m}_bytes_GB"] = cell[m]["total_bytes_GB"]
+                    merged[f"{m}_sum_time_s"] = cell[m]["sum_time_s"]
+                    merged[f"{m}_makespan_s"] = cell[m]["makespan_s"]
+                    merged[f"{m}_completed"] = cell[m]["completed"]
+                merged["conservation_ok"] = all(
+                    cell[m]["conservation_ok"] for m in MODES)
+                merged["all_completed"] = all(
+                    cell[m]["completed"] == cell[m]["lanes"] for m in MODES)
+                merged["adaptive_le_static"] = (
+                    merged["adaptive_bytes_GB"] <= merged["static_bytes_GB"])
+                merged["adaptive_lt_static"] = (
+                    merged["adaptive_bytes_GB"] < merged["static_bytes_GB"])
+                merged["saturation"] = merged["lanes"] >= 16
+                rows.append(merged)
+    return rows
+
+
+def check(rows: Sequence[Dict]) -> Dict[str, bool]:
+    """The acceptance booleans over a sweep's rows."""
+    sat = [r for r in rows if r["saturation"]]
+    return {
+        "all_completed": all(r["all_completed"] for r in rows),
+        "conservation_ok": all(r["conservation_ok"] for r in rows),
+        "adaptive_le_static_everywhere": all(
+            r["adaptive_le_static"] for r in rows),
+        "adaptive_lt_static_at_saturation": (
+            bool(sat) and all(r["adaptive_lt_static"] for r in sat)),
+    }
+
+
+def run():
+    t0 = time.perf_counter()
+    rows = sweep()
+    dt = time.perf_counter() - t0
+    crit = check(rows)
+    gain = max((1 - r["adaptive_bytes_GB"] / max(r["static_bytes_GB"], 1e-9))
+               for r in rows if r["saturation"]) * 100
+    return [{"name": "controller_sweep",
+             "us_per_call": round(dt * 1e6 / max(len(rows), 1), 1),
+             "derived": (f"adaptive_le_static={crit['adaptive_le_static_everywhere']} "
+                         f"lt_at_saturation={crit['adaptive_lt_static_at_saturation']} "
+                         f"best_saturation_gain={gain:.1f}%")
+             }], rows
+
+
+if __name__ == "__main__":
+    summary, rows = run()
+    for r in rows:
+        print(r)
+    print(summary)

@@ -42,6 +42,7 @@ ALL = [
     "fig10_scalability",
     "fig11_gathering",
     "fabric_sweep",
+    "controller_sweep",
     "roofline",
 ]
 
@@ -59,7 +60,7 @@ BENCH_SCHEMAS = {
     "BENCH_table6.json": {
         "batch_vs_scalar_at_64": dict, "sweep_timing": list,
         "contended_8x_shared_link": dict, "plane_event_loop": dict,
-        "fabric_sweep": list, "criteria": dict,
+        "fabric_sweep": list, "controller_sweep": list, "criteria": dict,
     },
 }
 
@@ -111,7 +112,9 @@ def quick() -> None:
 def quick_migration_plane() -> None:
     """Migration-plane smoke: batched-simulator speedup, the vectorized
     event loop vs the per-lane reference at 64 lanes, the contended
-    ALMA-vs-immediate gap, and the multi-rack fabric conservation sweep."""
+    ALMA-vs-immediate gap, the multi-rack fabric conservation sweep, and
+    the adaptive-concurrency-vs-static-gate contract."""
+    from benchmarks import controller_sweep as cs
     from benchmarks import fabric_sweep as fs
     from benchmarks import table6_benchmarks as t6
     from benchmarks.fig11_gathering import _plane_step_cost
@@ -145,6 +148,14 @@ def quick_migration_plane() -> None:
                           if "conservation_ok" in r)
     links_checked = sum(r.get("links_checked", 0) for r in fabric_rows)
 
+    # adaptive concurrency controller vs the static share-floor gate on a
+    # reduced contended grid (one 10-lane cell + one 18-lane saturation
+    # cell, core 1:4): the controller must never move more bytes than the
+    # gate, and must move strictly fewer at saturation
+    controller_rows = cs.sweep(racks_list=(2,), lanes_list=(4, 8),
+                               oversubs=(4.0,))
+    controller_crit = cs.check(controller_rows)
+
     payload = {
         "batch_vs_scalar_at_64": best,
         "sweep_timing": sweep_rows,
@@ -154,6 +165,7 @@ def quick_migration_plane() -> None:
             "speedup": round(plane_speedup, 2),
         },
         "fabric_sweep": fabric_rows,
+        "controller_sweep": controller_rows,
         "contended_8x_shared_link": {
             "immediate": {k: v for k, v in trad.items()
                           if not isinstance(v, dict)},
@@ -170,6 +182,11 @@ def quick_migration_plane() -> None:
             "fabric_conservation": conservation_ok,
             "alma_less_traffic": alma["traffic"] < trad["traffic"],
             "alma_less_time": alma["total_time"] < trad["total_time"],
+            "controller_no_worse": (
+                controller_crit["adaptive_le_static_everywhere"]
+                and controller_crit["all_completed"]),
+            "controller_better_at_saturation":
+                controller_crit["adaptive_lt_static_at_saturation"],
         },
     }
     check_bench_schema("BENCH_table6.json", payload)
@@ -193,11 +210,19 @@ def quick_migration_plane() -> None:
         f"alma traffic {alma['traffic']} !< immediate {trad['traffic']}"
     assert alma["total_time"] < trad["total_time"], \
         f"alma time {alma['total_time']} !< immediate {trad['total_time']}"
+    assert controller_crit["adaptive_le_static_everywhere"] \
+        and controller_crit["all_completed"], \
+        f"adaptive controller moved more bytes than the static gate: " \
+        f"{controller_rows}"
+    assert controller_crit["adaptive_lt_static_at_saturation"], \
+        f"adaptive controller not strictly better at saturation: " \
+        f"{controller_rows}"
     print(f"QUICK OK: plane speedup {best['speedup']}x, event loop "
           f"{plane_speedup:.1f}x, fabric links ok ({links_checked} checks), "
           f"contended traffic "
           f"-{payload['contended_8x_shared_link']['traffic_reduction_pct']}%, "
-          f"time -{payload['contended_8x_shared_link']['total_time_reduction_pct']}%")
+          f"time -{payload['contended_8x_shared_link']['total_time_reduction_pct']}%, "
+          f"controller<=static ok")
 
 
 def main() -> None:

@@ -1,10 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full pytest suite plus the benchmark smoke
-# (which refreshes and schema-checks BENCH_fig10.json / BENCH_table6.json).
+# (which refreshes and schema-checks BENCH_fig10.json / BENCH_table6.json,
+# and asserts the adaptive concurrency controller never moves more bytes
+# than the static share-floor gate on the contended grid).
+#
+#   --fast   tier-1 pytest only (skip the benchmark smoke)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+FAST=0
+for arg in "$@"; do
+    case "$arg" in
+        --fast) FAST=1 ;;
+        *) echo "verify.sh: unknown argument '$arg'" >&2; exit 2 ;;
+    esac
+done
+
 python -m pytest -x -q
-python -m benchmarks.run --quick
+if [ "$FAST" -eq 0 ]; then
+    python -m benchmarks.run --quick
+fi
 echo "verify.sh: OK"

@@ -1,0 +1,180 @@
+"""Adaptive concurrency controller — closing the loop from probe to policy.
+
+The paper's LMCM decides *when* each migration fires (Algorithm 2 picks the
+next LM moment; ``orchestrator.decide`` is that decision point), but it
+treats *how many* may fire together as a static provider knob
+(``max_concurrent``, later refined by the ``min_share_frac`` share-floor
+gate). PR 2/3 measured why that is the wrong shape: at >= 16 concurrent
+lanes the shared link — not the moment — becomes the bound, and a fixed
+floor can neither exploit an idle fabric nor recognize that two lanes with
+near-zero dirty rates share a link for free.
+
+This controller governs the SAME decision boundary as Algorithm 2 —
+``LMCM.due``, the moment a scheduled request is released — but along the
+orthogonal axis the paper leaves static: at each boundary it sweeps the
+candidate in-flight counts (*defer-k* over the ready queue, per migration
+domain) and launches the batch that minimizes **predicted total contended
+bytes**, tie-broken by predicted summed migration time, then by launching
+more. Where Algorithm 2 asks "is this a suitable LM moment for job j?",
+the controller asks "how many of the ready lanes should this moment
+carry?" — the concurrency/bandwidth co-scheduling that He & Buyya's
+taxonomy (2112.02593) and Wang et al.'s SDN planning (1412.4980) identify
+as the biggest traffic lever an orchestrator leaves unused.
+
+Inputs (all shipped by PR 3's fabric):
+
+  * ``plane.domain_links()`` / ``plane.what_if_shares(paths)`` — per-domain
+    membership and the max-min fair shares a hypothetical launch batch
+    would realize against exactly the domains it intersects;
+  * ``strunk.what_if_cost_batch`` — the batched pre-copy cost of a whole
+    candidate batch at those shares, rates sampled through the same
+    ``RateBank`` tables the execution plane uses;
+  * ``plane.path_capacity`` — the uncontended bottleneck a deferred lane
+    is priced at.
+
+The model, per migration domain (connected component of "shares a link"
+over the candidates' paths plus the live domains):
+
+  * launching ``k`` candidates prices each at its what-if fair share from
+    ``now`` (forced co-launches — requests past the provider's max-wait
+    wall — are included in the share solve and the bill);
+  * deferring the rest prices each at its uncontended path capacity from
+    ``now + defer_s`` — deliberately optimistic: a deferred lane re-enters
+    the sweep at the next boundary, so the estimate is re-judged every
+    tick, and the optimism biases toward deferral, the direction that
+    minimizes contended bytes (pricing the tail at its predicted *actual*
+    start times was tried and measured worse: long serial horizons make
+    deferral look phase-risky and push the sweep back toward concurrency);
+  * marginal dilution of already-in-flight lanes is NOT billed (their
+    remaining cost is mid-round state the what-if cannot cheaply reprice);
+    the omission biases toward deferral, which is the safe direction.
+
+Progress guarantees live with the caller: candidates the LMCM cannot defer
+past ``max_wait`` bypass the sweep entirely, and an idle domain always
+releases its head-of-line candidate (``select`` never returns an empty
+batch for a component with nothing in flight), so the controller can be
+strictly lazier than the static gate without ever stalling the fabric.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core import strunk
+
+
+def _default_path_of(plane):
+    def path_of(req) -> Tuple[str, ...]:
+        if getattr(req, "path", None):
+            return tuple(req.path)
+        return plane.topology.path(req.src, req.dst)
+    return path_of
+
+
+class AdaptiveConcurrencyController:
+    """Defer-k launch selection over the ready queue, per migration domain.
+
+    ``plane`` is a ``fabric.ShardedPlane`` or ``plane.MigrationPlane``
+    (both expose ``domain_links`` / ``what_if_shares`` / ``path_capacity``).
+    ``rate_of(req)`` returns the request's dirty-rate spec in the
+    lane-registration form of ``core/rates.py`` (a ``PiecewiseRate`` table
+    keeps the whole sweep vectorized); ``defer_s`` is the re-evaluation
+    delay deferred candidates are priced at (the LMCM's sampling period).
+    """
+
+    def __init__(self, plane, *,
+                 rate_of: Optional[Callable[[object], object]] = None,
+                 path_of: Optional[Callable[[object], Tuple[str, ...]]] = None,
+                 defer_s: float = 1.0):
+        self.plane = plane
+        self.rate_of = rate_of or (lambda req: None)
+        self.path_of = path_of or _default_path_of(plane)
+        self.defer_s = defer_s
+
+    # -- selection -----------------------------------------------------------
+    def select(self, candidates: Sequence, now: float, *,
+               forced: Sequence = ()) -> List:
+        """The subset of ``candidates`` to launch at ``now``. ``forced``
+        are requests launching regardless (max-wait wall); they are not
+        returned but their paths contend in every what-if evaluation."""
+        if not candidates:
+            return []
+        cand_paths = [self.path_of(r) for r in candidates]
+        forced_paths = [self.path_of(r) for r in forced]
+        chosen: List = []
+        for idxs, busy, f_idx in self._components(cand_paths, forced_paths):
+            group = [candidates[i] for i in idxs]
+            g_paths = [cand_paths[i] for i in idxs]
+            g_forced = [forced[i] for i in f_idx]
+            g_fpaths = [forced_paths[i] for i in f_idx]
+            k = self._best_k(group, g_paths, g_forced, g_fpaths, now)
+            if k == 0 and not busy and not g_forced:
+                k = 1        # idle domain: always release the head of line
+            chosen.extend(group[:k])
+        return chosen
+
+    # -- grouping ------------------------------------------------------------
+    def _components(self, cand_paths: Sequence[Tuple[str, ...]],
+                    forced_paths: Sequence[Tuple[str, ...]]
+                    ) -> List[Tuple[List[int], bool, List[int]]]:
+        """Connected components of "shares a link" over candidate paths,
+        forced-launch paths, and the live migration domains. Yields
+        (candidate indexes, has-in-flight-lanes, forced indexes) per
+        component; path-less candidates are unconstrained singletons."""
+        nodes: List[Tuple[Set[str], List[int], bool, List[int]]] = [
+            (set(p), [i], False, []) for i, p in enumerate(cand_paths)]
+        nodes += [(set(p), [], False, [i])
+                  for i, p in enumerate(forced_paths)]
+        nodes += [(set(d), [], True, []) for d in self.plane.domain_links()]
+        comps: List[Tuple[Set[str], List[int], bool, List[int]]] = []
+        for links, idxs, busy, f_idx in nodes:
+            hits = [c for c in comps if links and (links & c[0])]
+            merged = (set(links), list(idxs), busy, list(f_idx))
+            for c in hits:
+                merged = (merged[0] | c[0], merged[1] + c[1],
+                          merged[2] or c[2], merged[3] + c[3])
+                comps.remove(c)
+            comps.append(merged)
+        return [(sorted(c[1]), c[2], sorted(c[3])) for c in comps if c[1]]
+
+    # -- the sweep -----------------------------------------------------------
+    def _best_k(self, group: Sequence, paths: Sequence[Tuple[str, ...]],
+                forced: Sequence, forced_paths: Sequence[Tuple[str, ...]],
+                now: float) -> int:
+        """Candidate in-flight count minimizing predicted total contended
+        bytes over this component: launch ``group[:k]`` now at what-if
+        fair shares (alongside the forced launches), defer ``group[k:]``
+        to ``now + defer_s`` at uncontended path capacity. Tie-break:
+        summed predicted migration time, then larger k (never defer for
+        free)."""
+        n = len(group)
+        v = np.asarray([r.v_bytes for r in group], np.float64)
+        specs = [self.rate_of(r) for r in group]
+        v_forced = np.asarray([r.v_bytes for r in forced], np.float64)
+        specs_forced = [self.rate_of(r) for r in forced]
+        idle_bw = np.asarray(
+            [self.plane.path_capacity(r.src, r.dst) for r in group])
+        # a lane's deferred cost does not depend on k: price every
+        # candidate's deferral ONCE, and read "defer the k..n-1 tail" off
+        # suffix sums instead of re-simulating it n+1 times
+        deferred = strunk.what_if_cost_batch(
+            v, idle_bw, specs, np.full(n, now + self.defer_s), full=True)
+        tail_bytes = np.concatenate(
+            [np.cumsum(deferred.bytes_sent[::-1])[::-1], [0.0]])
+        tail_time = np.concatenate(
+            [np.cumsum(deferred.total_time[::-1])[::-1], [0.0]])
+        best: Optional[Tuple[Tuple[float, float, int], int]] = None
+        for k in range(n + 1):
+            launch_paths = list(forced_paths) + list(paths[:k])
+            shares = self.plane.what_if_shares(launch_paths)
+            launched = strunk.what_if_cost_batch(
+                np.concatenate([v_forced, v[:k]]), shares,
+                specs_forced + specs[:k],
+                np.full(len(forced) + k, now), full=True)
+            score = (float(launched.bytes_sent.sum() + tail_bytes[k]),
+                     float(launched.total_time.sum() + tail_time[k]),
+                     -k)
+            if best is None or score < best[0]:
+                best = (score, k)
+        return best[1]

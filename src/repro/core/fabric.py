@@ -76,8 +76,14 @@ class ShardedPlane:
         return [j for d in self._domains for j in d.jobs_in_flight()]
 
     def domain_links(self) -> List[frozenset]:
-        """Link sets of the live domains (diagnostics / tests)."""
+        """Link sets of the live domains (diagnostics / tests / the
+        adaptive controller's candidate grouping)."""
         return [d.link_set for d in self._domains]
+
+    def domain_paths(self) -> List[List[Tuple[str, ...]]]:
+        """Per-domain in-flight lane paths (the controller's what-if
+        baseline for each migration domain)."""
+        return [d.paths_in_flight() for d in self._domains]
 
     @property
     def link_bytes(self) -> Dict[str, float]:
@@ -96,18 +102,50 @@ class ShardedPlane:
             shares.update(d.last_shares)
         return shares
 
-    def probe_bandwidth(self, src: str, dst: str, extra: int = 0) -> float:
+    def probe_bandwidth(self, src: str, dst: str, extra: int = 0,
+                        pending: Sequence[Sequence[str]] = ()) -> float:
         """Fair-share bandwidth a NEW src->dst migration would realize,
         computed against the domains its path intersects — lanes in
         disjoint domains cannot affect the share, so the probe is
-        per-domain (the LMCM's ``bandwidth_probe`` wiring lands here)."""
+        per-domain (the LMCM's ``bandwidth_probe`` wiring lands here).
+        ``pending`` carries the actual paths of same-burst co-launches not
+        yet on the fabric (they widen the intersecting-domain set: a
+        co-launch can couple the probed lane to a domain its own path
+        never touches); ``extra`` approximates further committed launches
+        as same-path clones (legacy form)."""
         path = self.topology.path(src, dst)
-        pset = frozenset(path)
+        pend = [tuple(p) for p in pending]
+        pset = frozenset(path).union(*map(frozenset, pend)) if pend \
+            else frozenset(path)
         paths = [p for d in self._domains if pset & d.link_set
                  for p in d.paths_in_flight()]
-        paths += [path] * (extra + 1)
+        paths += pend + [path] * (extra + 1)
         share = float(network.fair_share(paths, self.caps)[-1])
         return share if np.isfinite(share) else self._fallback_bw
+
+    def what_if_shares(self, new_paths: Sequence[Sequence[str]]
+                       ) -> np.ndarray:
+        """Max-min fair shares the hypothetical lanes ``new_paths`` would
+        realize if all launched right now — solved against the union of
+        the domains any of them intersects (domains are maximal
+        components, so no other lane can affect the answer). One share per
+        new path; unlinked lanes get the fallback bandwidth."""
+        pend = [tuple(p) for p in new_paths]
+        if not pend:
+            return np.zeros(0)
+        links = frozenset(l for p in pend for l in p)
+        base = [p for d in self._domains if links & d.link_set
+                for p in d.paths_in_flight()]
+        shares = network.fair_share(base + pend, self.caps)[len(base):]
+        return np.where(np.isfinite(shares), shares, self._fallback_bw)
+
+    def path_capacity(self, src: str, dst: str) -> float:
+        """Uncontended capacity of the src->dst path (tightest link a lone
+        migration would traverse) — the launch gate's floor reference."""
+        path = self.topology.path(src, dst)
+        if not path:
+            return self._fallback_bw
+        return min(self.caps[l] for l in path)
 
     # -- lifecycle -----------------------------------------------------------
     def _new_domain(self) -> MigrationPlane:

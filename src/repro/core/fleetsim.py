@@ -173,7 +173,8 @@ class FleetSim:
                  topology: Optional[network.Topology] = None,
                  placement: Optional[Placement] = None,
                  min_share_frac: float = 0.0,
-                 core_oversubscription: float = 1.0):
+                 core_oversubscription: float = 1.0,
+                 adaptive_concurrency: bool = False):
         self.jobs = {j.job_id: j for j in jobs}
         self.rng = np.random.default_rng(seed)
         self.lmcm = LMCM(policy=policy, max_wait=max_wait,
@@ -198,8 +199,26 @@ class FleetSim:
         self.topology = topology
         self.placement = placement
         self.plane = ShardedPlane(self.topology)
-        self.lmcm.bandwidth_probe = lambda req, extra=0: \
-            self.plane.probe_bandwidth(req.src, req.dst, extra)
+        self.lmcm.bandwidth_probe = lambda req, extra=0, pending=(): \
+            self.plane.probe_bandwidth(req.src, req.dst, extra,
+                                       pending=pending)
+        # the launch gate's floor reference: the request's uncontended
+        # path capacity (on multi-rack substrates the ToR/core bottleneck,
+        # NOT the nominal access speed)
+        self.lmcm.path_capacity = lambda req: \
+            self.plane.path_capacity(req.src, req.dst)
+        if adaptive_concurrency:
+            # replace the static share-floor gate with the adaptive
+            # concurrency controller: defer-k sweeps per migration domain
+            # over the fabric's what-if probes (min_share_frac remains the
+            # fallback policy when the controller is off)
+            from repro.core.controller import AdaptiveConcurrencyController
+            self.lmcm.controller = AdaptiveConcurrencyController(
+                self.plane,
+                rate_of=lambda req: (
+                    self.jobs[req.job_id].trace.rate_table
+                    if req.job_id in self.jobs else None),
+                defer_s=sample_period)
         self.dt = sample_period
         self.now = 0.0
         # adopt jobs constructed with a default (empty) buffer into the

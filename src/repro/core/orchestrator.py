@@ -34,15 +34,33 @@ migration plane (``core/plane.py``), and the plane feeds back through
 ``bandwidth_probe`` — the max-min fair share a request would realize right
 now on its src->dst links. The deadline check and the alma-plus cost scan
 judge feasibility at that realized bandwidth instead of the nominal link
-speed, and ``min_share_frac`` lets ``due`` defer launches that would
-dilute every in-flight transfer below a share floor (the
-``max_concurrent`` knob made adaptive to what is actually moving).
+speed.
+
+Concurrency control at the release boundary (``due``) is pluggable:
+
+  * ``controller`` (preferred) — an adaptive concurrency controller
+    (``core/controller.py``) that sweeps candidate in-flight counts per
+    migration domain and launches the batch minimizing predicted total
+    contended bytes;
+  * ``min_share_frac`` (fallback) — the static share-floor gate: a
+    candidate whose realized fair share would fall below
+    ``min_share_frac`` x its *uncontended path capacity* is deferred one
+    sampling period. The gate probes cumulatively within the tick — each
+    candidate contends against the actual paths of every same-burst
+    co-launch admitted before it, not against same-path clones — so
+    co-launches in disjoint domains no longer dilute each other
+    spuriously, and a burst that would dilute everyone below the floor is
+    deferred as a burst.
+
+Either way, a request that can no longer be deferred without breaching the
+provider's ``max_wait`` is released unconditionally.
 """
 from __future__ import annotations
 
 import heapq
+import inspect
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -92,15 +110,28 @@ class LMCM:
         self.running: List[MigrationRequest] = []
         self.log: List[MigrationRequest] = []
         # realized-bandwidth feedback from the migration plane: fair-share
-        # bandwidth a request would get right now, given what's in flight
-        # plus ``extra`` launches committed in the same release burst. The
-        # simulator wires this to MigrationPlane.probe_bandwidth; the
-        # deadline check and the alma-plus cost scan use it in place of the
-        # nominal link speed, and ``due`` defers launches whose share would
-        # fall below ``min_share_frac`` x nominal (0 disables the gate).
-        self.bandwidth_probe: Optional[
-            Callable[[MigrationRequest, int], float]] = None
+        # bandwidth a request would get right now, given what's in flight.
+        # Preferred signature (req, extra, pending): ``pending`` carries
+        # the actual paths of same-burst co-launches not yet in flight,
+        # ``extra`` approximates further ones as same-path clones; legacy
+        # two-argument probes are detected once and fed the clone count
+        # only. The simulator wires this to ShardedPlane.probe_bandwidth;
+        # the deadline check and the alma-plus cost scan use it in place
+        # of the nominal link speed, and ``due``'s fallback gate defers
+        # launches whose share would fall below ``min_share_frac`` x the
+        # request's uncontended path capacity (0 disables the gate).
+        self.bandwidth_probe: Optional[Callable[..., float]] = None
+        self._probe_pending: Tuple[Optional[Callable], bool] = (None, False)
         self.min_share_frac = min_share_frac
+        # uncontended capacity of a request's src->dst path (the gate's
+        # floor reference on multi-rack topologies, where the bottleneck
+        # is the ToR/core link, not the nominal single-link speed); wired
+        # to ShardedPlane.path_capacity by the simulator
+        self.path_capacity: Optional[
+            Callable[[MigrationRequest], float]] = None
+        # adaptive concurrency controller (core/controller.py): when set,
+        # it replaces the static share-floor gate at the release boundary
+        self.controller = None
 
     # -- registration --------------------------------------------------------
     def register_job(self, job_id: str, telemetry: TelemetryBuffer,
@@ -151,18 +182,58 @@ class LMCM:
             return pp.postpone(model, m_now) * self.sample_period
         return self._best_window_wait(job, model, req, now)
 
-    def effective_bandwidth(self, req: MigrationRequest,
-                            extra: int = 0) -> float:
+    def effective_bandwidth(self, req: MigrationRequest, extra: int = 0,
+                            pending: Sequence[Tuple[str, ...]] = ()
+                            ) -> float:
         """Bandwidth this request would realize now: the plane's fair-share
-        probe when wired, capped by the nominal link speed. ``extra`` counts
-        launches already released in the same burst but not yet in flight
-        (approximated as sharing this request's path)."""
+        probe when wired, capped by the nominal link speed. ``pending``
+        carries the ACTUAL network paths of launches released in the same
+        burst but not yet in flight; ``extra`` approximates further such
+        launches as clones of this request's path (the legacy form kept
+        for two-argument probes)."""
         if self.bandwidth_probe is None:
             return self.bandwidth
-        probed = self.bandwidth_probe(req, extra)
+        if pending:
+            if self._takes_pending():
+                probed = self.bandwidth_probe(req, extra, tuple(pending))
+            else:
+                # legacy two-argument probe: fold the co-launches into the
+                # same-path-clone approximation (exact on a single link)
+                probed = self.bandwidth_probe(req, extra + len(pending))
+        else:
+            probed = self.bandwidth_probe(req, extra)
         if not np.isfinite(probed) or probed <= 0:
             return self.bandwidth
         return min(self.bandwidth, probed)
+
+    def _takes_pending(self) -> bool:
+        """Whether the wired probe accepts the third ``pending`` argument —
+        decided from its signature (cached per probe object) rather than a
+        try/except, which would silently mask TypeErrors raised INSIDE a
+        modern probe and degrade it to the clone approximation."""
+        fn = self.bandwidth_probe
+        if self._probe_pending[0] is not fn:
+            try:
+                params = list(inspect.signature(fn).parameters.values())
+                ok = (len(params) >= 3
+                      or any(p.kind is p.VAR_POSITIONAL for p in params))
+            except (TypeError, ValueError):
+                ok = False
+            self._probe_pending = (fn, ok)
+        return self._probe_pending[1]
+
+    def _floor_reference(self, req: MigrationRequest) -> float:
+        """The bandwidth the share floor is a fraction OF: the request's
+        uncontended path capacity when the topology is wired (a cross-rack
+        transfer through an oversubscribed core can never realize the
+        nominal access speed — gating it against ``self.bandwidth`` would
+        defer it forever even on an idle fabric), else the nominal link
+        speed."""
+        if self.path_capacity is not None:
+            cap = self.path_capacity(req)
+            if np.isfinite(cap) and cap > 0:
+                return cap
+        return self.bandwidth
 
     def _best_window_wait(self, job: SurveilledJob, model: cycles.CycleModel,
                           req: MigrationRequest, now: float) -> float:
@@ -218,25 +289,15 @@ class LMCM:
 
     def due(self, now: float) -> List[MigrationRequest]:
         """Pop requests whose moment has come, honoring max_concurrent and
-        (when the plane is wired) the realized-bandwidth launch gate."""
-        out = []
+        the concurrency policy at the release boundary: the adaptive
+        controller when wired, else the cumulative share-floor gate."""
         self.running = [r for r in self.running if r.decision == "running"]
+        ready: List[MigrationRequest] = []
         while (self.queue and self.queue[0][0] <= now
-               and len(self.running) + len(out) < self.max_concurrent):
+               and len(self.running) + len(ready) < self.max_concurrent):
             _, gen, req = heapq.heappop(self.queue)
             if req.decision != "scheduled" or gen != req.heap_gen:
                 continue            # cancelled or superseded: stale entry
-            # contention gate: if launching now would realize less than
-            # min_share_frac of the nominal link speed, defer one sampling
-            # period (but never past max_wait, and never when idle)
-            if (self.min_share_frac > 0.0 and self.bandwidth_probe is not None
-                    and (len(self.running) + len(out)) > 0
-                    and now + self.sample_period
-                    <= req.created_at + self.max_wait):
-                if (self.effective_bandwidth(req, extra=len(out))
-                        < self.min_share_frac * self.bandwidth):
-                    self._push(req, now + self.sample_period)
-                    continue
             # re-check suitability at fire time (cycle may have drifted)
             if self.policy != "immediate":
                 wait = self.decide(req, now)
@@ -248,10 +309,57 @@ class LMCM:
                         req.created_at + self.max_wait:
                     self._push(req, now + wait)
                     continue
+            ready.append(req)
+        out, deferred = self._admit(ready, now)
+        for req in deferred:
+            self._push(req, now + self.sample_period)
+        for req in out:
             req.decision = "running"
-            out.append(req)
         self.running.extend(out)
         return out
+
+    def _admit(self, ready: List[MigrationRequest], now: float
+               ) -> Tuple[List[MigrationRequest], List[MigrationRequest]]:
+        """Split the tick's ready burst into (launch, defer). Requests
+        that cannot wait another sampling period without breaching
+        ``max_wait`` always launch; the rest go through the adaptive
+        controller when wired, else the share-floor gate, else all
+        launch."""
+        if not ready:
+            return [], []
+        can_defer = [now + self.sample_period <= r.created_at + self.max_wait
+                     for r in ready]
+        if self.controller is not None:
+            forced = [r for r, ok in zip(ready, can_defer) if not ok]
+            free = [r for r, ok in zip(ready, can_defer) if ok]
+            chosen = {id(r) for r in
+                      self.controller.select(free, now, forced=forced)}
+            launch = [r for r, ok in zip(ready, can_defer)
+                      if not ok or id(r) in chosen]
+            return launch, [r for r in free if id(r) not in chosen]
+        if self.min_share_frac <= 0.0 or self.bandwidth_probe is None:
+            return ready, []
+        # static fallback: cumulative share-floor gate. Each candidate is
+        # probed against everything in flight PLUS the actual paths of the
+        # co-launches admitted earlier in this same burst, and defers when
+        # its share would fall below min_share_frac x its uncontended path
+        # capacity. An idle fabric always admits the head of the burst.
+        launch, defer = [], []
+        pending_paths: List[Tuple[str, ...]] = []
+        blind = 0               # admitted co-launches with no tagged path:
+        for req, ok in zip(ready, can_defer):   # fall back to clone-counting
+            gated = ok and (self.running or launch)
+            if gated and (self.effective_bandwidth(
+                    req, extra=blind, pending=pending_paths)
+                    < self.min_share_frac * self._floor_reference(req)):
+                defer.append(req)
+                continue
+            launch.append(req)
+            if req.path:
+                pending_paths.append(tuple(req.path))
+            else:
+                blind += 1
+        return launch, defer
 
     def finish(self, req: MigrationRequest,
                outcome: strunk.MigrationOutcome) -> None:

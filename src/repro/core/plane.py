@@ -145,16 +145,50 @@ class MigrationPlane:
         return {j: float(s) for j, s in zip(self._share_jobs,
                                             self._share_vec)}
 
-    def probe_bandwidth(self, src: str, dst: str, extra: int = 0) -> float:
+    def probe_bandwidth(self, src: str, dst: str, extra: int = 0,
+                        pending: Sequence[Sequence[str]] = ()) -> float:
         """Fair-share bandwidth a NEW src->dst migration would receive right
         now, given everything already in flight — the realized-bandwidth
-        signal the LMCM feeds into its deadline/cost decisions. ``extra``
-        counts additional same-path launches already committed but not yet
-        on the plane (a simultaneous release burst shares with itself)."""
+        signal the LMCM feeds into its deadline/cost decisions. ``pending``
+        carries the ACTUAL paths of co-launches committed in the same
+        release burst but not yet on the plane; ``extra`` approximates
+        further committed launches as same-path clones (the legacy,
+        conservative-on-multilink form)."""
         path = self.topology.path(src, dst)
-        paths = [m.path for m in self._meta] + [path] * (extra + 1)
+        paths = [m.path for m in self._meta]
+        paths += [tuple(p) for p in pending]
+        paths += [path] * (extra + 1)
         share = float(network.fair_share(paths, self.caps)[-1])
         return share if np.isfinite(share) else self._fallback_bw
+
+    def what_if_shares(self, new_paths: Sequence[Sequence[str]]
+                       ) -> np.ndarray:
+        """Max-min fair shares the hypothetical lanes ``new_paths`` would
+        realize if all launched right now alongside everything in flight —
+        the adaptive concurrency controller's candidate-batch input.
+        Returns one share per new path (unlinked lanes get the fallback
+        bandwidth)."""
+        pend = [tuple(p) for p in new_paths]
+        if not pend:
+            return np.zeros(0)
+        paths = [m.path for m in self._meta] + pend
+        shares = network.fair_share(paths, self.caps)[len(self._meta):]
+        return np.where(np.isfinite(shares), shares, self._fallback_bw)
+
+    def path_capacity(self, src: str, dst: str) -> float:
+        """Uncontended capacity of the src->dst path: the tightest link a
+        lone migration would traverse (the launch gate's floor reference —
+        a cross-rack transfer can never exceed its ToR/core bottleneck, so
+        gating it against the nominal access speed would starve it)."""
+        path = self.topology.path(src, dst)
+        if not path:
+            return self._fallback_bw
+        return min(self.caps[l] for l in path)
+
+    def domain_links(self) -> List[frozenset]:
+        """Link sets of the live migration domains — a monolithic plane is
+        one domain (interface parity with ``fabric.ShardedPlane``)."""
+        return [self.link_set] if self._meta else []
 
     # -- lifecycle -----------------------------------------------------------
     def launch(self, req, rate: RateSpec, now: float, *,
@@ -311,7 +345,11 @@ class MigrationPlane:
                 self._rem = np.where(complete, 0.0,
                                      self._rem - shares * dt)
                 self._share_jobs = [m.req.job_id for m in self._meta]
-            self.now = until if truncated else self.now + dt
+            # the clock may only land PAST ``until`` through float rounding
+            # (now + dt can round up even when dt < until - now): clamp, so
+            # domain merges always meet at the advance target
+            nxt = self.now + dt
+            self.now = until if (truncated or nxt > until) else nxt
             self._share_vec = shares
             drop: List[int] = []
             for i in np.flatnonzero(complete):
@@ -365,13 +403,24 @@ class MigrationPlane:
             rounds=int(self._rounds[i]),
             stop_reason=strunk.STOP_REASONS[int(self._reason[i])])
 
+    # relative event-clock tolerance for domain merges: the fabric advances
+    # both planes to a common target before bridging, and truncated chunks
+    # land on ``until`` exactly — but the vectorized path's in-place ufunc
+    # summation can leave a freshly drained/launched domain within a few
+    # ULPs of the target (float addition order), so merges accept clocks
+    # equal to within this relative epsilon and snap to the host plane's.
+    ABSORB_EPS = 1e-9
+
     def _absorb(self, other: "MigrationPlane") -> None:
         """Merge ``other``'s in-flight lanes into this plane — both planes
         must sit at the same event time (the fabric advances them to a
-        common ``now`` before bridging two migration domains)."""
-        if other.now != self.now:
+        common ``now`` before bridging two migration domains), equal to
+        within ``ABSORB_EPS`` relative (see above)."""
+        tol = self.ABSORB_EPS * max(1.0, abs(self.now), abs(other.now))
+        if not (abs(other.now - self.now) <= tol):   # NaN-safe: also rejects
             raise ValueError(f"cannot absorb plane at t={other.now} "
                              f"into plane at t={self.now}")
+        other.now = self.now                         # snap within tolerance
         other._fold_link_vec()
         self._fold_link_vec()
         self._meta.extend(other._meta)

@@ -156,6 +156,11 @@ class RateBank:
                 table = PiecewiseRate([1.0], [0.0])   # placeholder row
             tables.append(table)
         self._lookup = PiecewiseRate.batch(tables) if tables else None
+        # public view of the stacked lookup: an (M,) time array -> (M,)
+        # rates callable (``.vectorized``/``.nonneg`` set), valid whenever
+        # ``fallback`` is empty — strunk's what-if costing reuses it to
+        # price hypothetical lane batches through the same tables
+        self.table_fn = self._lookup
         self._t = np.empty(self.m)
         self._out = np.empty(self.m)
 

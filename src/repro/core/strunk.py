@@ -143,6 +143,14 @@ def simulate_precopy_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
     """
     v = np.atleast_1d(np.asarray(v_mem, np.float64))
     m = v.shape[0]
+    if m == 0:
+        # the round loop below terminates on ``stop.any()``, which an empty
+        # lane set can never satisfy — answer the empty batch directly
+        # (what-if sweeps legitimately evaluate "launch nothing")
+        z = np.zeros(0)
+        return BatchMigrationOutcome(
+            total_time=z, downtime=np.zeros(0), bytes_sent=np.zeros(0),
+            rounds=np.zeros(0, np.int64), stop_reason=np.zeros(0, np.int64))
     bw = np.broadcast_to(np.asarray(bandwidth, np.float64), (m,))
     t0 = np.broadcast_to(np.asarray(start_time, np.float64), (m,))
     rate = batch_rate_fn(dirty_rate, m)
@@ -304,3 +312,32 @@ def expected_cost_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
         np.broadcast_to(np.asarray(v_mem, np.float64), (m,)), bandwidth,
         dirty_rate, start_time=np.broadcast_to(start, (m,)))
     return out if full else out.bytes_sent
+
+
+def what_if_cost_batch(v_mem, bandwidth, rate_specs: Sequence, start_times,
+                       *, full: bool = False):
+    """``expected_cost_batch`` over (M,) *hypothetical* lanes whose dirty
+    rates are given as lane-registration specs (``core/rates.py``: tables,
+    constants, ``rate_table`` objects, plain callables, None).
+
+    The specs are normalized through the same ``RateBank`` the execution
+    plane registers its lanes with, so an all-tabular candidate batch
+    samples every lane's rate in ONE padded lookup per round — the entry
+    point the adaptive concurrency controller (``core/controller.py``)
+    uses to price a whole defer-k sweep without per-lane Python. Lanes
+    whose spec cannot be tabulated fall back to per-lane sampling.
+    """
+    from repro.core.rates import RateBank, as_rate_table
+    specs = list(rate_specs)
+    if not specs:
+        return expected_cost_batch(np.zeros(0), bandwidth, 0.0,
+                                   np.zeros(0), full=full)
+    bank = RateBank(specs)
+    if not bank.fallback:
+        rate: BatchDirtyRate = bank.table_fn
+    else:
+        # mixed tables + callables: hand the normalized per-lane specs to
+        # the compatibility path (callables are sampled per lane)
+        rate = [as_rate_table(s) or s for s in specs]
+    return expected_cost_batch(v_mem, bandwidth, rate, start_times,
+                               full=full)

@@ -167,6 +167,67 @@ def test_probe_is_per_domain():
     assert plane.probe_bandwidth("r0h0", "r1h0") == pytest.approx(cap / 5)
 
 
+def test_absorb_tolerates_ulp_clock_skew():
+    """Regression: the fabric merges domains at a common event time, and
+    truncated chunks normally land on ``until`` exactly — but the
+    vectorized path's float summation can leave a domain within a few
+    ULPs of the target. ``_absorb`` must accept (and snap) clocks equal
+    within the documented epsilon, and still reject real skew."""
+    topo = _rack_topo()
+    tr = _trace()
+    plane = ShardedPlane(topo)
+    # v/bw chosen so round boundaries land on non-representable times
+    for r in ("r0", "r1"):
+        plane.launch(MigrationRequest(f"{r}j", 0.0, 1e9 / 3,
+                                      src=f"{r}h0", dst=f"{r}h1"),
+                     tr.rate_table, 0.0)
+    t = 1.0 + 1.0 / 3.0
+    plane.advance(t)                       # vectorized advance, both domains
+    d0, d1 = plane._domains
+    assert d0.now == t and d1.now == t
+    # simulate the ULP drift the clamp now prevents from ever compounding
+    d1.now = np.nextafter(np.nextafter(t, np.inf), np.inf)
+    plane.launch(MigrationRequest("bridge", 0.0, 1e9,
+                                  src="r0h1", dst="r1h0"),
+                 tr.rate_table, t)
+    assert plane.domain_count == 1 and plane.merges == 1
+    done = _tuples(plane.advance(np.inf))
+    assert set(done) == {"r0j", "r1j", "bridge"}
+    # genuine skew (beyond epsilon) must still be rejected
+    a = MigrationPlane(topo)
+    b = MigrationPlane(topo)
+    a.now, b.now = 100.0, 100.1
+    with pytest.raises(ValueError):
+        a._absorb(b)
+
+
+def test_merge_after_vectorized_advance_lands_on_target():
+    """Truncated vectorized chunks must land the event clock on the
+    advance target EXACTLY (the merge precondition), including when
+    now + dt would round past it."""
+    topo = _rack_topo()
+    tr = _trace()
+    plane = ShardedPlane(topo)
+    rng = np.random.default_rng(13)
+    for r in ("r0", "r1"):
+        for i in range(3):
+            plane.launch(MigrationRequest(
+                f"{r}j{i}", 0.0, float(rng.uniform(0.3e9, 1.7e9)) / 3,
+                src=f"{r}h0", dst=f"{r}h1"), tr.rate_table, 0.0)
+    t = 0.0
+    for _ in range(40):                    # many odd-sized steps
+        t += 0.1 + 1.0 / 7.0
+        plane.advance(t)
+        for d in plane._domains:
+            assert d.now == t
+    plane.launch(MigrationRequest("bridge", 0.0, 1e9,
+                                  src="r0h0", dst="r1h1"),
+                 tr.rate_table, t)
+    assert plane.domain_count == 1
+    done = _tuples(plane.advance(np.inf))
+    assert "bridge" in done
+
+
 # ---------------------------------------------------------------------------
 # vectorized event loop vs the scalar reference plane
 # ---------------------------------------------------------------------------

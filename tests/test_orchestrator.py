@@ -194,6 +194,113 @@ def test_min_share_launch_gate():
     assert len(lmcm.due(2.0)) == 2
 
 
+def test_gate_floor_uses_path_capacity_not_nominal_bandwidth():
+    """Regression (multi-rack): the share floor must be a fraction of the
+    request's UNCONTENDED PATH CAPACITY, not of the nominal single-link
+    speed — a cross-rack transfer through a 1:4-oversubscribed core can
+    never realize the access speed, and the old nominal-referenced floor
+    deferred it forever even with the fabric nearly idle."""
+    from repro.core.fabric import ShardedPlane
+    from repro.core.network import Topology
+    cap = 125e6
+    # cross-rack bottleneck: the core at cap/2
+    topo = Topology.multi_rack(2, cap, core_capacity=cap / 2,
+                               hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    lmcm = LMCM(policy="immediate", max_concurrent=8, bandwidth=cap,
+                min_share_frac=0.6, max_wait=600.0, sample_period=1.0)
+    lmcm.bandwidth_probe = lambda req, extra=0, pending=(): \
+        plane.probe_bandwidth(req.src, req.dst, extra, pending=pending)
+    lmcm.path_capacity = lambda req: plane.path_capacity(req.src, req.dst)
+    # something in flight elsewhere so the gate is active (not idle)
+    plane.launch(MigrationRequest("bg", 0.0, 1e12,
+                                  src="r1h0", dst="r1h1"), 1e6, 0.0)
+    req = MigrationRequest("x", 0.0, 1e9, src="r0h0", dst="r1h0")
+    req.path = topo.path(req.src, req.dst)
+    lmcm.running.append(MigrationRequest("bg", 0.0, 1e12,
+                                         src="r1h0", dst="r1h1"))
+    lmcm.running[0].decision = "running"
+    lmcm.submit(req, 0.0)
+    # realized share: the cross path shares acc:r1 with bg -> cap/2 = the
+    # core bottleneck = its full uncontended capacity. New floor: 0.6 x
+    # cap/2 -> passes. Old floor 0.6 x cap -> deferred forever.
+    fired = lmcm.due(0.0)
+    assert [r.job_id for r in fired] == ["x"]
+    # sanity: without the wired path_capacity the old behavior deferred
+    lmcm2 = LMCM(policy="immediate", max_concurrent=8, bandwidth=cap,
+                 min_share_frac=0.6, max_wait=600.0, sample_period=1.0)
+    lmcm2.bandwidth_probe = lmcm.bandwidth_probe
+    lmcm2.running = lmcm.running
+    req2 = MigrationRequest("x2", 0.0, 1e9, src="r0h0", dst="r1h0")
+    req2.path = topo.path(req2.src, req2.dst)
+    lmcm2.submit(req2, 0.0)
+    assert lmcm2.due(0.0) == []
+
+
+def test_same_tick_burst_diluted_below_floor_defers_both():
+    """Regression: two same-tick launches that would each dilute below
+    the share floor must BOTH defer — the gate probes cumulatively within
+    the tick instead of admitting each as if alone."""
+    from repro.core.network import Topology
+    from repro.core.plane import MigrationPlane
+    cap = 125e6
+    lmcm = LMCM(policy="immediate", max_concurrent=8, bandwidth=cap,
+                min_share_frac=0.4, max_wait=60.0, sample_period=1.0)
+    plane = MigrationPlane(Topology.single_link(cap))
+    lmcm.bandwidth_probe = lambda req, extra=0, pending=(): \
+        plane.probe_bandwidth(req.src, req.dst, extra, pending=pending)
+    lmcm.path_capacity = lambda req: plane.path_capacity(req.src, req.dst)
+    # two lanes already in flight: a third would get cap/3 > floor, a
+    # third AND fourth would each get cap/4 < floor = 0.4 x cap
+    for i in range(2):
+        bg = MigrationRequest(f"bg{i}", 0.0, 1e12)
+        plane.launch(bg, 1e6, 0.0)
+        bg.decision = "running"
+        lmcm.running.append(bg)
+    reqs = [MigrationRequest(f"j{i}", 0.0, 1e9) for i in range(2)]
+    for r in reqs:
+        r.path = plane.topology.path(r.src, r.dst)
+        lmcm.submit(r, 0.0)
+    assert lmcm.due(0.0) == []
+    assert all(r.decision == "scheduled" for r in reqs)
+
+
+def test_same_tick_disjoint_domains_not_spuriously_deferred():
+    """Regression: same-tick co-launches in DISJOINT migration domains
+    must not dilute each other. The old gate approximated co-launches as
+    clones of the probed request's own path, so an intra-r1 launch halved
+    the probed share of an intra-r0 candidate that shares no link with
+    it; probing with the actual paths admits both."""
+    from repro.core.fabric import ShardedPlane
+    from repro.core.network import Topology
+    cap = 125e6
+    topo = Topology.multi_rack(3, cap, core_capacity=3 * cap,
+                               hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    lmcm = LMCM(policy="immediate", max_concurrent=8, bandwidth=cap,
+                min_share_frac=0.6, max_wait=60.0, sample_period=1.0)
+    lmcm.bandwidth_probe = lambda req, extra=0, pending=(): \
+        plane.probe_bandwidth(req.src, req.dst, extra, pending=pending)
+    lmcm.path_capacity = lambda req: plane.path_capacity(req.src, req.dst)
+    # background lane in r2 so the gate is active for the whole burst
+    bg = MigrationRequest("bg", 0.0, 1e12, src="r2h0", dst="r2h1")
+    plane.launch(bg, 1e6, 0.0)
+    bg.decision = "running"
+    lmcm.running.append(bg)
+    # same-tick candidates in two OTHER disjoint racks: neither shares a
+    # link with bg or with each other
+    a = MigrationRequest("a", 0.0, 1e9, src="r0h0", dst="r0h1")
+    b = MigrationRequest("b", 0.0, 1e9, src="r1h0", dst="r1h1")
+    for r in (a, b):
+        r.path = topo.path(r.src, r.dst)
+        lmcm.submit(r, 0.0)
+    # legacy clone counting probed b as "a's launch = a clone of b's own
+    # path": acc:r1 at cap/2 < 0.6 x cap -> spurious deferral. Actual-path
+    # probing sees a's path is disjoint: both launch at full share.
+    fired = lmcm.due(0.0)
+    assert [r.job_id for r in fired] == ["a", "b"]
+
+
 def test_realized_bandwidth_reaches_decisions():
     """With lanes in flight, the LMCM's deadline check uses the plane's
     fair-share probe: a migration that would fit at full link speed is
