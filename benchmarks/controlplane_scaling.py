@@ -1,0 +1,192 @@
+"""Control-plane scaling sweep — decision latency and event-skipped time.
+
+ISSUE 5's acceptance bench, two measurements:
+
+1. **Defer-k decision latency** (16 -> 256 candidates x 2 -> 8 racks):
+   one ``AdaptiveConcurrencyController.select`` over a simultaneous
+   candidate burst, stacked one-solve sweep vs the kept per-k reference
+   loop. The reference solves fair shares and prices a pre-copy batch
+   once PER prefix (O(n) solves + O(n) simulations per component); the
+   stacked sweep answers every prefix with ONE masked share solve
+   (``network.fair_share_masked``) and ONE flattened
+   ``strunk.what_if_cost_batch``. Selections must be bit-identical.
+
+2. **Event-skipping FleetSim** (sparse 1-hour plans): ``run_with_plan``
+   with ``event_skip`` on vs off on an idle-dominated fleet — a handful
+   of migrations spread over an hour, long workload cycles. With
+   ``policy="immediate"`` (the paper's no-surveillance baseline; the
+   simulator no longer burns surveillance ticks it never reads) the skip
+   path jumps straight between arrivals/releases; with ``alma-paper``
+   jumps stop at every surveillance staleness boundary so the refresh
+   schedule — and therefore every fit and decision — is bit-identical.
+   Results (bytes, times, telemetry ring, rng stream) must match the
+   per-second loop exactly.
+
+``benchmarks.run --quick`` runs a reduced grid and asserts: sweep
+speedup >= 5x at 64 candidates, selections bit-equal everywhere, and
+>= 10x end-to-end wall time on the immediate sparse plan.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core import network
+from repro.core.controller import AdaptiveConcurrencyController
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import (FleetSim, PAPER_BANDWIDTH, SimJob,
+                                 WorkloadTrace)
+from repro.core.orchestrator import MigrationRequest
+from repro.core.rates import PiecewiseRate
+
+ACCESS = PAPER_BANDWIDTH                  # 1 Gbit/s ToR links
+
+
+def _controller_case(n_cands: int, racks: int, seed: int):
+    """A contended decision point: some lanes already in flight plus a
+    simultaneous burst of intra- and cross-rack candidates."""
+    topo = network.Topology.multi_rack(
+        racks, ACCESS, core_capacity=racks * ACCESS / 2.0, hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    rng = np.random.default_rng(seed)
+    rates: Dict[str, PiecewiseRate] = {}
+
+    def lane(tag: str, i: int) -> MigrationRequest:
+        src, dst = int(rng.integers(racks)), int(rng.integers(racks))
+        req = MigrationRequest(f"{tag}{i}", 0.0,
+                               float(rng.uniform(0.3e9, 2e9)),
+                               src=f"r{src}h0", dst=f"r{dst}h1")
+        rates[req.job_id] = PiecewiseRate(
+            [60.0, 120.0], [float(rng.uniform(0, 150e6)), 3e6],
+            offset=float(rng.uniform(0, 120)))
+        return req
+
+    for i in range(racks):                 # background in-flight lanes
+        plane.launch(lane("bg", i), rates[f"bg{i}"], 0.0)
+    plane.advance(1.0)
+    cands = [lane("c", i) for i in range(n_cands)]
+    return plane, cands, rates
+
+
+def sweep_cell(n_cands: int, racks: int, seed: int = 0, reps: int = 3
+               ) -> Dict:
+    """Time one select() under both sweep engines; assert identical
+    selections."""
+    row = {"n_candidates": n_cands, "racks": racks}
+    picks = {}
+    for mode in ("stacked", "reference"):
+        plane, cands, rates = _controller_case(n_cands, racks, seed)
+        ctl = AdaptiveConcurrencyController(
+            plane, rate_of=lambda r: rates[r.job_id], sweep=mode)
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            picks[mode] = [r.job_id for r in ctl.select(cands, plane.now)]
+            best = min(best, time.perf_counter() - t0)
+        row[f"{mode}_ms"] = round(best * 1e3, 3)
+    row["speedup"] = round(row["reference_ms"] / max(row["stacked_ms"],
+                                                     1e-9), 2)
+    row["selection_equal"] = picks["stacked"] == picks["reference"]
+    row["launched"] = len(picks["stacked"])
+    return row
+
+
+def sweep(n_list: Sequence[int] = (16, 64, 256),
+          racks_list: Sequence[int] = (2, 4, 8), seed: int = 0
+          ) -> List[Dict]:
+    return [sweep_cell(n, racks, seed)
+            for n in n_list for racks in racks_list]
+
+
+def _sparse_fleet(policy: str, n_jobs: int, event_skip: bool,
+                  seed: int = 3):
+    """An idle-dominated fleet: long (2040 s) workload cycles, warmup
+    long enough for confident cycle fits, four migrations spread over the
+    hour. Warmup always runs event-skipped (its bulk path is bit-equal
+    and tested separately); ``event_skip`` governs only the measured
+    ``run_with_plan``."""
+    jobs = [SimJob(f"j{i}",
+                   WorkloadTrace([("IO", 340.0), ("CPU", 680.0),
+                                  ("MEM", 340.0), ("CPU", 680.0)],
+                                 total_s=28800, offset=23.0 * i), 1e9)
+            for i in range(n_jobs)]
+    sim = FleetSim(jobs, policy=policy, warmup_s=8200.0, max_concurrent=8,
+                   seed=seed, event_skip=True)
+    sim._event_skip = event_skip
+    return sim
+
+
+def fleetsim_cell(policy: str, n_jobs: int, horizon_s: float = 3600.0
+                  ) -> Dict:
+    """run_with_plan with event skipping on vs off: identical results
+    (bytes, summed time, telemetry ring, rng stream), wall-clock ratio."""
+    out = {}
+    for skip in (True, False):
+        sim = _sparse_fleet(policy, n_jobs, skip)
+        plan = [MigrationRequest(f"j{i}", sim.now + 300.0 + 900.0 * k, 1e9)
+                for k, i in enumerate((0, 5, 11, 17))]
+        t0 = time.perf_counter()
+        res = sim.run_with_plan(plan, horizon_s=horizon_s)
+        out[skip] = (time.perf_counter() - t0, res, sim)
+    (w1, r1, s1), (w0, r0, s0) = out[True], out[False]
+    identical = (r1.total_bytes == r0.total_bytes
+                 and r1.total_time == r0.total_time
+                 and r1.link_bytes == r0.link_bytes
+                 and s1.now == s0.now
+                 and np.array_equal(s1.telemetry._data, s0.telemetry._data)
+                 and np.array_equal(s1.telemetry._steps, s0.telemetry._steps)
+                 and s1.rng.bit_generator.state == s0.rng.bit_generator.state)
+    return {"policy": policy, "n_jobs": n_jobs, "horizon_s": horizon_s,
+            "completed": len(r1.per_job),
+            "skip_wall_s": round(w1, 3), "loop_wall_s": round(w0, 3),
+            "speedup": round(w0 / max(w1, 1e-9), 2),
+            "identical": bool(identical)}
+
+
+def fleetsim_cells(n_jobs: int = 96) -> List[Dict]:
+    # warm jax shape buckets outside the timed runs (the surveillance
+    # pipeline jit-compiles per power-of-two batch bucket)
+    fleetsim_cell("alma-paper", n_jobs, horizon_s=60.0)
+    return [fleetsim_cell("immediate", n_jobs),
+            fleetsim_cell("alma-paper", n_jobs)]
+
+
+def check(sweep_rows: Sequence[Dict], sim_rows: Sequence[Dict]
+          ) -> Dict[str, bool]:
+    """The acceptance booleans (--quick criteria)."""
+    at64 = [r for r in sweep_rows if r["n_candidates"] == 64]
+    imm = [r for r in sim_rows if r["policy"] == "immediate"]
+    return {
+        "sweep_5x_at_64": bool(at64) and all(r["speedup"] >= 5.0
+                                             for r in at64),
+        "selections_bit_equal": all(r["selection_equal"]
+                                    for r in sweep_rows),
+        "run_with_plan_10x": bool(imm) and all(r["speedup"] >= 10.0
+                                               for r in imm),
+        "run_with_plan_identical": all(r["identical"] for r in sim_rows),
+    }
+
+
+def run():
+    t0 = time.perf_counter()
+    sweep_rows = sweep()
+    sim_rows = fleetsim_cells()
+    dt = time.perf_counter() - t0
+    crit = check(sweep_rows, sim_rows)
+    at64 = max(r["speedup"] for r in sweep_rows if r["n_candidates"] == 64)
+    skip = max(r["speedup"] for r in sim_rows if r["policy"] == "immediate")
+    rows = sweep_rows + sim_rows + [{"criteria": crit}]
+    return [{"name": "controlplane_scaling",
+             "us_per_call": round(dt * 1e6 / max(len(rows), 1), 1),
+             "derived": (f"sweep@64={at64}x skip={skip}x "
+                         f"parity={crit['selections_bit_equal']}"
+                         f"&{crit['run_with_plan_identical']}")}], rows
+
+
+if __name__ == "__main__":
+    summary, rows = run()
+    for r in rows:
+        print(r)
+    print(summary)

@@ -17,7 +17,12 @@ detailed rows to experiments/bench/<name>.json.
     multi-rack star fabric sweep (core oversubscription 1:1 -> 1:4); and
     under contention — one shared 1 Gbit/s bottleneck, 8 simultaneous
     requests — alma-paper must beat immediate on both total migration
-    time and bytes (BENCH_table6.json).
+    time and bytes (BENCH_table6.json);
+  * the control-plane scaling smoke: the stacked one-solve defer-k sweep
+    must select bit-identically to the per-k reference and be >= 5x
+    faster at 64 candidates, and the event-skipping FleetSim must be
+    bit-identical to the per-second loop and >= 10x faster end-to-end on
+    a sparse 1-hour plan (immediate policy).
 
 Both emit their JSON at the repo root for the cross-PR perf trajectory,
 schema-checked first (``check_bench_schema``) so a silently renamed key
@@ -43,6 +48,7 @@ ALL = [
     "fig11_gathering",
     "fabric_sweep",
     "controller_sweep",
+    "controlplane_scaling",
     "roofline",
 ]
 
@@ -60,7 +66,8 @@ BENCH_SCHEMAS = {
     "BENCH_table6.json": {
         "batch_vs_scalar_at_64": dict, "sweep_timing": list,
         "contended_8x_shared_link": dict, "plane_event_loop": dict,
-        "fabric_sweep": list, "controller_sweep": list, "criteria": dict,
+        "fabric_sweep": list, "controller_sweep": list,
+        "controlplane_scaling": dict, "criteria": dict,
     },
 }
 
@@ -156,6 +163,15 @@ def quick_migration_plane() -> None:
                                oversubs=(4.0,))
     controller_crit = cs.check(controller_rows)
 
+    # control-plane scaling (reduced): the stacked one-solve defer-k
+    # sweep vs the per-k reference (bit-equal selections, >= 5x at 64
+    # candidates) and the event-skipping FleetSim on a sparse 1-hour
+    # plan (bit-identical results, >= 10x wall on the immediate policy)
+    from benchmarks import controlplane_scaling as cps
+    cps_sweep = cps.sweep(n_list=(16, 64), racks_list=(2, 4))
+    cps_sim = cps.fleetsim_cells(n_jobs=96)
+    cps_crit = cps.check(cps_sweep, cps_sim)
+
     payload = {
         "batch_vs_scalar_at_64": best,
         "sweep_timing": sweep_rows,
@@ -166,6 +182,9 @@ def quick_migration_plane() -> None:
         },
         "fabric_sweep": fabric_rows,
         "controller_sweep": controller_rows,
+        "controlplane_scaling": {
+            "sweep": cps_sweep, "fleetsim": cps_sim, "criteria": cps_crit,
+        },
         "contended_8x_shared_link": {
             "immediate": {k: v for k, v in trad.items()
                           if not isinstance(v, dict)},
@@ -187,6 +206,11 @@ def quick_migration_plane() -> None:
                 and controller_crit["all_completed"]),
             "controller_better_at_saturation":
                 controller_crit["adaptive_lt_static_at_saturation"],
+            "controlplane_sweep_5x": cps_crit["sweep_5x_at_64"],
+            "controlplane_selection_parity": (
+                cps_crit["selections_bit_equal"]
+                and cps_crit["run_with_plan_identical"]),
+            "controlplane_skip_10x": cps_crit["run_with_plan_10x"],
         },
     }
     check_bench_schema("BENCH_table6.json", payload)
@@ -217,12 +241,27 @@ def quick_migration_plane() -> None:
     assert controller_crit["adaptive_lt_static_at_saturation"], \
         f"adaptive controller not strictly better at saturation: " \
         f"{controller_rows}"
+    assert cps_crit["selections_bit_equal"], \
+        f"stacked defer-k sweep diverged from the per-k reference: " \
+        f"{cps_sweep}"
+    assert cps_crit["sweep_5x_at_64"], \
+        f"stacked defer-k sweep < 5x at 64 candidates: {cps_sweep}"
+    assert cps_crit["run_with_plan_identical"], \
+        f"event-skipping FleetSim diverged from the per-second loop: " \
+        f"{cps_sim}"
+    assert cps_crit["run_with_plan_10x"], \
+        f"event-skipping FleetSim < 10x on the sparse plan: {cps_sim}"
+    sweep64 = max(r["speedup"] for r in cps_sweep
+                  if r["n_candidates"] == 64)
+    skip_x = max(r["speedup"] for r in cps_sim
+                 if r["policy"] == "immediate")
     print(f"QUICK OK: plane speedup {best['speedup']}x, event loop "
           f"{plane_speedup:.1f}x, fabric links ok ({links_checked} checks), "
           f"contended traffic "
           f"-{payload['contended_8x_shared_link']['traffic_reduction_pct']}%, "
           f"time -{payload['contended_8x_shared_link']['total_time_reduction_pct']}%, "
-          f"controller<=static ok")
+          f"controller<=static ok, defer-k sweep {sweep64}x@64, "
+          f"event-skip {skip_x}x")
 
 
 def main() -> None:

@@ -54,14 +54,30 @@ past ``max_wait`` bypass the sweep entirely, and an idle domain always
 releases its head-of-line candidate (``select`` never returns an empty
 batch for a component with nothing in flight), so the controller can be
 strictly lazier than the static gate without ever stalling the fabric.
+
+Cost of a decision (the fleet-scale constraint): the sweep is ONE-SOLVE.
+The n+1 nested "launch the first k" batches share one (L, M) incidence,
+so their fair shares come from a single stacked progressive filling
+(``plane.what_if_shares_sweep`` -> ``network.fair_share_masked``), every
+prefix is priced in ONE flattened ``strunk.what_if_cost_batch`` call
+(rate tables gathered from one ``RateBank`` — ``bank.take`` — instead of
+n+1 re-normalizations), and per-k totals are segment sums over the
+flattened outcome. Candidate grouping unions paths through
+``network.LinkUnionFind`` — near-linear in candidates + live domains
+instead of quadratic pairwise set intersections. The pre-refactor per-k
+loop is kept verbatim as ``_sweep_reference`` (``sweep="reference"``):
+its per-lane pre-copy recurrences and per-k share solves are the
+executable spec the stacked path must match — same selected k, same
+(bytes, time, -k) score tuple — asserted by tests/test_controlplane.py
+over random topologies and by the controlplane_scaling benchmark.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Set, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import strunk
+from repro.core import network, strunk
 
 
 def _default_path_of(plane):
@@ -76,21 +92,32 @@ class AdaptiveConcurrencyController:
     """Defer-k launch selection over the ready queue, per migration domain.
 
     ``plane`` is a ``fabric.ShardedPlane`` or ``plane.MigrationPlane``
-    (both expose ``domain_links`` / ``what_if_shares`` / ``path_capacity``).
-    ``rate_of(req)`` returns the request's dirty-rate spec in the
-    lane-registration form of ``core/rates.py`` (a ``PiecewiseRate`` table
-    keeps the whole sweep vectorized); ``defer_s`` is the re-evaluation
-    delay deferred candidates are priced at (the LMCM's sampling period).
+    (both expose ``domain_links`` / ``what_if_shares_sweep`` /
+    ``path_capacity``). ``rate_of(req)`` returns the request's dirty-rate
+    spec in the lane-registration form of ``core/rates.py`` (a
+    ``PiecewiseRate`` table keeps the whole sweep vectorized); ``defer_s``
+    is the re-evaluation delay deferred candidates are priced at (the
+    LMCM's sampling period).
+
+    ``sweep`` selects the sweep engine: ``"stacked"`` (default) answers
+    all n+1 prefixes with one share solve + one flattened cost batch —
+    O(one solve) per component per tick; ``"reference"`` is the original
+    per-k loop (one share solve + one pre-copy batch PER prefix), kept as
+    the executable spec and as the honest baseline the
+    ``controlplane_scaling`` benchmark times the stacked path against.
+    Both select the same k with the same score tuple.
     """
 
     def __init__(self, plane, *,
                  rate_of: Optional[Callable[[object], object]] = None,
                  path_of: Optional[Callable[[object], Tuple[str, ...]]] = None,
-                 defer_s: float = 1.0):
+                 defer_s: float = 1.0, sweep: str = "stacked"):
+        assert sweep in ("stacked", "reference")
         self.plane = plane
         self.rate_of = rate_of or (lambda req: None)
         self.path_of = path_of or _default_path_of(plane)
         self.defer_s = defer_s
+        self.sweep = sweep
 
     # -- selection -----------------------------------------------------------
     def select(self, candidates: Sequence, now: float, *,
@@ -119,24 +146,43 @@ class AdaptiveConcurrencyController:
                     forced_paths: Sequence[Tuple[str, ...]]
                     ) -> List[Tuple[List[int], bool, List[int]]]:
         """Connected components of "shares a link" over candidate paths,
-        forced-launch paths, and the live migration domains. Yields
+        forced-launch paths, and the live migration domains, via one
+        ``network.LinkUnionFind`` pass — near-linear in paths + domains
+        (the old pairwise set-intersection merge was O(n^2) in candidates
+        and re-hashed every domain's frozenset each tick). Yields
         (candidate indexes, has-in-flight-lanes, forced indexes) per
-        component; path-less candidates are unconstrained singletons."""
-        nodes: List[Tuple[Set[str], List[int], bool, List[int]]] = [
-            (set(p), [i], False, []) for i, p in enumerate(cand_paths)]
-        nodes += [(set(p), [], False, [i])
-                  for i, p in enumerate(forced_paths)]
-        nodes += [(set(d), [], True, []) for d in self.plane.domain_links()]
-        comps: List[Tuple[Set[str], List[int], bool, List[int]]] = []
-        for links, idxs, busy, f_idx in nodes:
-            hits = [c for c in comps if links and (links & c[0])]
-            merged = (set(links), list(idxs), busy, list(f_idx))
-            for c in hits:
-                merged = (merged[0] | c[0], merged[1] + c[1],
-                          merged[2] or c[2], merged[3] + c[3])
-                comps.remove(c)
-            comps.append(merged)
-        return [(sorted(c[1]), c[2], sorted(c[3])) for c in comps if c[1]]
+        component, ordered by smallest candidate index; path-less
+        candidates are unconstrained singletons."""
+        uf = network.LinkUnionFind()
+        comps: dict = {}                 # root (or singleton tag) -> state
+
+        def entry(root):
+            c = comps.get(root)
+            if c is None:
+                c = comps[root] = ([], False, [])
+            return c
+
+        roots = [uf.union_path(p) for p in cand_paths]
+        f_roots = [uf.union_path(p) for p in forced_paths]
+        d_roots = [uf.union_path(d) for d in self.plane.domain_links()]
+        # a second find per path collapses the unions that happened after
+        # the path's own union_path call
+        for i, r in enumerate(roots):
+            if r is None:                # path-less: its own component
+                comps[("solo", i)] = ([i], False, [])
+            else:
+                entry(uf.find(r))[0].append(i)
+        for i, r in enumerate(f_roots):
+            if r is not None:
+                entry(uf.find(r))[2].append(i)
+        for r in d_roots:
+            if r is not None:
+                root = uf.find(r)
+                c = entry(root)
+                comps[root] = (c[0], True, c[2])
+        out = [(idxs, busy, f_idx) for idxs, busy, f_idx in comps.values()
+               if idxs]
+        return sorted(out, key=lambda c: c[0][0])
 
     # -- the sweep -----------------------------------------------------------
     def _best_k(self, group: Sequence, paths: Sequence[Tuple[str, ...]],
@@ -147,23 +193,95 @@ class AdaptiveConcurrencyController:
         fair shares (alongside the forced launches), defer ``group[k:]``
         to ``now + defer_s`` at uncontended path capacity. Tie-break:
         summed predicted migration time, then larger k (never defer for
-        free)."""
-        n = len(group)
+        free). Dispatches to the one-solve stacked sweep (default) or the
+        per-k reference loop (``sweep="reference"``)."""
+        fn = self._sweep_stacked if self.sweep == "stacked" \
+            else self._sweep_reference
+        return fn(group, paths, forced, forced_paths, now)[0]
+
+    def _deferred_tails(self, v: np.ndarray, idle_bw: np.ndarray,
+                        specs: Sequence, now: float
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        # a lane's deferred cost does not depend on k: price every
+        # candidate's deferral ONCE, and read "defer the k..n-1 tail" off
+        # suffix sums instead of re-simulating it n+1 times
+        deferred = strunk.what_if_cost_batch(
+            v, idle_bw, specs, np.full(len(v), now + self.defer_s),
+            full=True)
+        tail_bytes = np.concatenate(
+            [np.cumsum(deferred.bytes_sent[::-1])[::-1], [0.0]])
+        tail_time = np.concatenate(
+            [np.cumsum(deferred.total_time[::-1])[::-1], [0.0]])
+        return tail_bytes, tail_time
+
+    def _sweep_inputs(self, group: Sequence, forced: Sequence, now: float):
         v = np.asarray([r.v_bytes for r in group], np.float64)
         specs = [self.rate_of(r) for r in group]
         v_forced = np.asarray([r.v_bytes for r in forced], np.float64)
         specs_forced = [self.rate_of(r) for r in forced]
         idle_bw = np.asarray(
             [self.plane.path_capacity(r.src, r.dst) for r in group])
-        # a lane's deferred cost does not depend on k: price every
-        # candidate's deferral ONCE, and read "defer the k..n-1 tail" off
-        # suffix sums instead of re-simulating it n+1 times
-        deferred = strunk.what_if_cost_batch(
-            v, idle_bw, specs, np.full(n, now + self.defer_s), full=True)
-        tail_bytes = np.concatenate(
-            [np.cumsum(deferred.bytes_sent[::-1])[::-1], [0.0]])
-        tail_time = np.concatenate(
-            [np.cumsum(deferred.total_time[::-1])[::-1], [0.0]])
+        tails = self._deferred_tails(v, idle_bw, specs, now)
+        return v, specs, v_forced, specs_forced, tails
+
+    def _sweep_stacked(self, group: Sequence,
+                       paths: Sequence[Tuple[str, ...]], forced: Sequence,
+                       forced_paths: Sequence[Tuple[str, ...]], now: float
+                       ) -> Tuple[int, Tuple[float, float, int]]:
+        """One-solve sweep: all n+1 prefix batches share ONE stacked
+        fair-share solve and ONE flattened pre-copy cost batch.
+
+        Prefixes are nested, so the F+n distinct (lane, start-time) pairs
+        repeat across prefixes with only the SHARE varying — the flattened
+        batch lays out prefix k's lanes contiguously (forced first, then
+        candidates 0..k-1, identical to the reference's per-k layout), the
+        rate tables are gathered from one ``RateBank`` over the F+n unique
+        specs, and per-k totals are contiguous-slice segment sums —
+        bit-identical to the reference's per-k ``.sum()`` calls (same
+        values, same lengths, same pairwise order)."""
+        from repro.core.rates import RateBank
+        n, n_f = len(group), len(forced)
+        v, specs, v_forced, specs_forced, (tail_bytes, tail_time) = \
+            self._sweep_inputs(group, forced, now)
+        # (n+1, F+n) shares: row k = fair shares of forced + group[:k]
+        shares = self.plane.what_if_shares_sweep(forced_paths, paths)
+        # flattened layout: segment k holds forced + group[:k]
+        counts = n_f + np.arange(n + 1)
+        seg = np.concatenate([[0], np.cumsum(counts)])
+        within = np.arange(int(seg[-1])) - np.repeat(seg[:-1], counts)
+        row = np.repeat(np.arange(n + 1), counts)
+        v_all = np.concatenate([v_forced, v])
+        specs_all = specs_forced + specs
+        bank = RateBank(specs_all)
+        # un-tabulatable specs (plain callables) take the reference's
+        # per-lane compatibility path; tabular banks gather in one go
+        rate_arg = bank.take(within) if not bank.fallback \
+            else [specs_all[i] for i in within]
+        launched = strunk.what_if_cost_batch(
+            v_all[within], shares[row, within], rate_arg,
+            np.full(len(within), now), full=True)
+        best: Optional[Tuple[Tuple[float, float, int], int]] = None
+        for k in range(n + 1):
+            lo, hi = int(seg[k]), int(seg[k + 1])
+            score = (float(launched.bytes_sent[lo:hi].sum()
+                           + tail_bytes[k]),
+                     float(launched.total_time[lo:hi].sum() + tail_time[k]),
+                     -k)
+            if best is None or score < best[0]:
+                best = (score, k)
+        return best[1], best[0]
+
+    def _sweep_reference(self, group: Sequence,
+                         paths: Sequence[Tuple[str, ...]], forced: Sequence,
+                         forced_paths: Sequence[Tuple[str, ...]], now: float
+                         ) -> Tuple[int, Tuple[float, float, int]]:
+        """The pre-refactor per-k loop, kept verbatim as the executable
+        spec: one fair-share solve and one pre-copy cost batch PER prefix.
+        The stacked sweep must select the same k with the same score
+        tuple."""
+        n, n_f = len(group), len(forced)
+        v, specs, v_forced, specs_forced, (tail_bytes, tail_time) = \
+            self._sweep_inputs(group, forced, now)
         best: Optional[Tuple[Tuple[float, float, int], int]] = None
         for k in range(n + 1):
             launch_paths = list(forced_paths) + list(paths[:k])
@@ -171,10 +289,10 @@ class AdaptiveConcurrencyController:
             launched = strunk.what_if_cost_batch(
                 np.concatenate([v_forced, v[:k]]), shares,
                 specs_forced + specs[:k],
-                np.full(len(forced) + k, now), full=True)
+                np.full(n_f + k, now), full=True)
             score = (float(launched.bytes_sent.sum() + tail_bytes[k]),
                      float(launched.total_time.sum() + tail_time[k]),
                      -k)
             if best is None or score < best[0]:
                 best = (score, k)
-        return best[1]
+        return best[1], best[0]

@@ -24,16 +24,28 @@ Why shard instead of one big plane:
 
 Domains are dynamic: they form at launch, merge when a cross-rack lane
 bridges them, and dissolve when their lanes drain (byte accounting is
-folded into the fabric's persistent per-link counters). The fabric
-presents the same surface as a single plane — ``launch`` / ``advance`` /
-``probe_bandwidth`` / ``link_bytes`` / ``last_shares`` — so ``FleetSim``
-and the LMCM's realized-bandwidth feedback are agnostic to the sharding;
-``probe_bandwidth`` computes the fair share against the intersecting
-domains only (disjoint domains cannot affect a new lane's share).
+folded into the fabric's persistent per-link counters). Domain membership
+is kept in a link-keyed union-find (``network.LinkUnionFind``: path
+compression + union by size, one root per domain): resolving a launch
+path to the domains it touches is one ``find`` per path link — O(alpha),
+independent of how many domains are live — instead of an intersection
+scan over every domain's link set, and a domain merge unions two roots
+while ``MigrationPlane._absorb`` stitches the per-root execution state
+(SoA lanes, rate bank, incidence) in place rather than rebuilding it from
+the merged lane list. A drained domain's component is deleted wholesale
+(its links revert to unregistered).
+
+The fabric presents the same surface as a single plane — ``launch`` /
+``advance`` / ``probe_bandwidth`` / ``link_bytes`` / ``last_shares`` — so
+``FleetSim`` and the LMCM's realized-bandwidth feedback are agnostic to
+the sharding; ``probe_bandwidth`` computes the fair share against the
+intersecting domains only (disjoint domains cannot affect a new lane's
+share), and ``what_if_shares_sweep`` answers the adaptive controller's
+whole defer-k prefix ladder in one stacked solve.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -55,6 +67,26 @@ class ShardedPlane:
         self._fallback_bw = max(self.caps.values(), default=np.inf)
         self.now = 0.0
         self._domains: List[MigrationPlane] = []
+        # link-keyed domain membership: find(link) -> root -> plane.
+        # _domains stays the ordered iteration surface (creation order,
+        # which fixes lane order inside merged planes and the base-path
+        # order of probes — both bit-parity-relevant)
+        self._uf = network.LinkUnionFind()
+        self._root_domain: Dict[str, MigrationPlane] = {}
+        self._domain_root: Dict[int, str] = {}            # id(plane) -> root
+        self._unlinked: Optional[MigrationPlane] = None   # path-less lanes
+        self._dom_seq = 0
+        # the union-find is keyed by link *incarnations*: a link whose
+        # last live lane completed detaches from its component (domains
+        # are components of the LIVE "shares a link" relation — matching
+        # a new launch against a drained link's old domain would couple
+        # event chunking across lanes that share nothing), and its next
+        # use re-registers a fresh key. Ghost keys are reaped wholesale
+        # when their domain drains (``pop_component``).
+        self._link_key: Dict[str, str] = {}               # live link -> key
+        self._live: Dict[str, int] = {}                   # live lanes per link
+        self._lane_links: Dict[int, frozenset] = {}       # id(req) -> links
+        self._gen = 0
         self._pending: List[Tuple[object, strunk.MigrationOutcome]] = []
         self._retired_link_bytes: Dict[str, float] = {}
         # final shares of domains that dissolved during the MOST RECENT
@@ -102,6 +134,20 @@ class ShardedPlane:
             shares.update(d.last_shares)
         return shares
 
+    def _hit_domains(self, links: Iterable[str]) -> List[MigrationPlane]:
+        """The live domains whose in-flight lanes touch any of ``links``
+        — one union-find lookup per link (O(alpha) each, independent of
+        the domain count), returned in domain-creation order (=
+        ``self._domains`` order, which probe base-path ordering and merge
+        targeting both rely on)."""
+        hits: Dict[int, MigrationPlane] = {}
+        for l in links:
+            key = self._link_key.get(l)
+            if key is not None:
+                d = self._root_domain[self._uf.find(key)]
+                hits[id(d)] = d
+        return sorted(hits.values(), key=lambda d: d._fabric_seq)
+
     def probe_bandwidth(self, src: str, dst: str, extra: int = 0,
                         pending: Sequence[Sequence[str]] = ()) -> float:
         """Fair-share bandwidth a NEW src->dst migration would realize,
@@ -117,7 +163,7 @@ class ShardedPlane:
         pend = [tuple(p) for p in pending]
         pset = frozenset(path).union(*map(frozenset, pend)) if pend \
             else frozenset(path)
-        paths = [p for d in self._domains if pset & d.link_set
+        paths = [p for d in self._hit_domains(pset)
                  for p in d.paths_in_flight()]
         paths += pend + [path] * (extra + 1)
         share = float(network.fair_share(paths, self.caps)[-1])
@@ -133,11 +179,28 @@ class ShardedPlane:
         pend = [tuple(p) for p in new_paths]
         if not pend:
             return np.zeros(0)
-        links = frozenset(l for p in pend for l in p)
-        base = [p for d in self._domains if links & d.link_set
-                for p in d.paths_in_flight()]
+        base = self._base_paths(l for p in pend for l in p)
         shares = network.fair_share(base + pend, self.caps)[len(base):]
         return np.where(np.isfinite(shares), shares, self._fallback_bw)
+
+    def _base_paths(self, links: Iterable[str]) -> List[Tuple[str, ...]]:
+        return [p for d in self._hit_domains(links)
+                for p in d.paths_in_flight()]
+
+    def what_if_shares_sweep(self, fixed_paths: Sequence[Sequence[str]],
+                             cand_paths: Sequence[Sequence[str]]
+                             ) -> np.ndarray:
+        """All n+1 nested what-if batches of the defer-k sweep in ONE
+        stacked solve: row k holds the fair shares of the F ``fixed_paths``
+        lanes plus the first k ``cand_paths`` lanes against the domains the
+        sweep intersects (columns past F+k are inactive and read 0).
+        Equivalent to n+1 ``what_if_shares`` calls over growing prefixes;
+        see ``network.fair_share_masked``."""
+        base = self._base_paths(
+            l for paths in (fixed_paths, cand_paths) for p in paths
+            for l in p)
+        return network.what_if_prefix_shares(
+            base, fixed_paths, cand_paths, self.caps, self._fallback_bw)
 
     def path_capacity(self, src: str, dst: str) -> float:
         """Uncontended capacity of the src->dst path (tightest link a lone
@@ -151,34 +214,72 @@ class ShardedPlane:
     def _new_domain(self) -> MigrationPlane:
         d = MigrationPlane(self.topology, vectorized=self.vectorized,
                            **self._plane_kw)
+        d._fabric_seq = self._dom_seq
+        self._dom_seq += 1
         self._domains.append(d)
         return d
+
+    def _on_finished(self, done):
+        """Completion bookkeeping: a finished lane releases its links —
+        a link whose live count reaches zero detaches from the union-find
+        (its key is dropped; the ghost node is reaped at domain drain)."""
+        for req, _ in done:
+            for l in self._lane_links.pop(id(req), ()):
+                left = self._live[l] - 1
+                if left:
+                    self._live[l] = left
+                else:
+                    del self._live[l]
+                    del self._link_key[l]
+        return done
 
     def launch(self, req, rate: RateSpec, now: float, *,
                path: Optional[Sequence[str]] = None) -> None:
         """Start executing ``req`` at ``now`` in the domain its path
         belongs to — creating it, or merging the domains the path bridges
         (e.g. a cross-rack lane joining two busy racks through the core).
-        ``rate`` follows the lane-registration API of ``core/rates.py``."""
+        Domain resolution is one union-find lookup per path link and a
+        merge is one union per bridged domain — O(alpha), with
+        ``MigrationPlane._absorb`` stitching the bridged domains' live
+        execution state in place. ``rate`` follows the lane-registration
+        API of ``core/rates.py``."""
         p = tuple(path) if path is not None else \
             self.topology.path(req.src, req.dst)
         pset = frozenset(p)
         if pset:
-            hits = [d for d in self._domains if pset & d.link_set]
+            hits = self._hit_domains(pset)
         else:
             # unlinked lanes never contend; keep them in one side domain
-            hits = [d for d in self._domains if not d.link_set]
+            hits = [self._unlinked] if self._unlinked is not None else []
         if not hits:
             target = self._new_domain()
+            if not pset:
+                self._unlinked = target
         else:
             target = hits[0]
             for other in hits[1:]:
                 t = max(now, target.now, other.now)
-                self._pending.extend(target.advance(t))
-                self._pending.extend(other.advance(t))
+                self._pending.extend(self._on_finished(target.advance(t)))
+                self._pending.extend(self._on_finished(other.advance(t)))
                 target._absorb(other)
                 self._domains.remove(other)
                 self.merges += 1
+        if pset:
+            old_roots = [self._domain_root[id(d)] for d in hits]
+            for l in pset:
+                if l not in self._link_key:
+                    self._gen += 1
+                    self._link_key[l] = f"{l}#{self._gen}"
+                self._live[l] = self._live.get(l, 0) + 1
+            root = self._uf.union_path(self._link_key[l] for l in p)
+            for r in old_roots:
+                root = self._uf.union(root, r)
+                self._root_domain.pop(r, None)
+            for d in hits:
+                self._domain_root.pop(id(d), None)
+            self._root_domain[root] = target
+            self._domain_root[id(target)] = root
+            self._lane_links[id(req)] = pset
         target.launch(req, rate, now, path=p)
         self.now = max(self.now, now)
 
@@ -186,13 +287,14 @@ class ShardedPlane:
         """Advance every domain's event loop to ``until`` (or drain);
         returns completions across all domains (plus any produced by
         launch-time catch-ups and merges). Drained domains dissolve —
-        their byte accounting folds into the fabric counters."""
+        their byte accounting folds into the fabric counters and their
+        union-find component is deleted wholesale."""
         finished = self._pending
         self._pending = []
         live: List[MigrationPlane] = []
         self._dissolved_shares = {}
         for d in self._domains:
-            finished.extend(d.advance(until))
+            finished.extend(self._on_finished(d.advance(until)))
             if not np.isfinite(until):
                 self.now = max(self.now, d.now)
             if d.in_flight:
@@ -202,6 +304,12 @@ class ShardedPlane:
                     self._retired_link_bytes[l] = \
                         self._retired_link_bytes.get(l, 0.0) + b
                 self._dissolved_shares.update(d.last_shares)
+                root = self._domain_root.pop(id(d), None)
+                if root is not None:
+                    self._root_domain.pop(root, None)
+                    self._uf.pop_component(root)
+                if d is self._unlinked:
+                    self._unlinked = None
         self._domains = live
         if np.isfinite(until):
             self.now = max(self.now, until)

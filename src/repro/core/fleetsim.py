@@ -24,6 +24,14 @@ is given (per-host access links joined through a core sized by
 ``core_oversubscription``); without a placement it falls back to the
 paper's single shared migration link.
 
+Time advances event-skipped: when nothing is in flight, ``run_with_plan``
+jumps the clock straight to the next pending arrival / LMCM release /
+surveillance staleness boundary (and ``run_idle`` to its end),
+bulk-appending the skipped telemetry — ring contents, rng stream, fits,
+and outcomes are bit-identical to ticking one second at a time
+(``event_skip=False`` restores the pure per-second loop; the fast path
+also needs the fleet SoA store and stock ``WorkloadTrace`` samplers).
+
 Workload traces: phase sequences in the style of the paper's Table 3
 artificial cycles (CPU/MEM/IO/IDLE), each phase with characteristic load
 indexes (the NB features) and a dirty rate; plus "application" traces
@@ -44,7 +52,8 @@ from repro.core.consolidation import Placement
 from repro.core.fabric import ShardedPlane
 from repro.core.orchestrator import LMCM, MigrationRequest
 from repro.core.rates import PiecewiseRate  # noqa: F401  (re-export)
-from repro.core.telemetry import FleetTelemetry, TelemetryBuffer
+from repro.core.telemetry import DEFAULT_FIELDS, FleetTelemetry, \
+    TelemetryBuffer
 
 # phase archetypes: load-index means (step_time, dirty_bytes, dirty_fraction,
 # collective_bytes, compute_util, hbm_util) + dirty rate in bytes/s.
@@ -64,6 +73,19 @@ PHASES = {
     "IDLE": dict(compute_util=0.03, hbm_util=0.05, dirty_rate=0.3e6,
                  label=characterize.IDLE),
 }
+
+
+def phase_means(name: str) -> Tuple[float, ...]:
+    """A phase's load-index means in telemetry field order
+    (``DEFAULT_FIELDS``) — the ONE place the per-field formulas live, so
+    the scalar sampler (``WorkloadTrace.sample_indexes``) and the bulk
+    recorder's precomputed tables cannot drift apart."""
+    ph = PHASES[name]
+    return (0.5 / max(ph["compute_util"], 0.02),        # step_time
+            ph["dirty_rate"],                           # dirty_bytes
+            min(1.0, ph["dirty_rate"] / 200e6),         # dirty_fraction
+            ph["compute_util"] * 1e9,                   # collective_bytes
+            ph["compute_util"], ph["hbm_util"])
 
 
 @dataclass
@@ -96,16 +118,11 @@ class WorkloadTrace:
         return self._rate
 
     def sample_indexes(self, t: float, rng: np.random.Generator) -> dict:
-        ph = PHASES[self.phase_at(t)]
+        means = phase_means(self.phase_at(t))
         j = lambda v: float(max(0.0, v * (1 + self.jitter * rng.standard_normal())))
-        return dict(
-            step_time=j(0.5 / max(ph["compute_util"], 0.02)),
-            dirty_bytes=j(ph["dirty_rate"]),
-            dirty_fraction=j(min(1.0, ph["dirty_rate"] / 200e6)),
-            collective_bytes=j(ph["compute_util"] * 1e9),
-            compute_util=j(ph["compute_util"]),
-            hbm_util=j(ph["hbm_util"]),
-        )
+        # dict(zip(...)) draws one normal per field IN FIELD ORDER — the
+        # rng-stream contract the bulk recorder reproduces as one array
+        return dict(zip(DEFAULT_FIELDS, (j(v) for v in means)))
 
     def label_at(self, t: float) -> int:
         return PHASES[self.phase_at(t)]["label"]
@@ -174,7 +191,8 @@ class FleetSim:
                  placement: Optional[Placement] = None,
                  min_share_frac: float = 0.0,
                  core_oversubscription: float = 1.0,
-                 adaptive_concurrency: bool = False):
+                 adaptive_concurrency: bool = False,
+                 event_skip: bool = True):
         self.jobs = {j.job_id: j for j in jobs}
         self.rng = np.random.default_rng(seed)
         self.lmcm = LMCM(policy=policy, max_wait=max_wait,
@@ -233,6 +251,24 @@ class FleetSim:
             getattr(j.telemetry, "fleet", None) is self.telemetry
             and j.telemetry.index == i
             for i, j in enumerate(self._job_list))
+        # bulk (vectorized, bit-identical) telemetry recording is possible
+        # when every job records into the fleet SoA store through the
+        # stock WorkloadTrace sampler — the precondition for both the
+        # run_idle fast path and run_with_plan's event skipping
+        self._bulk_ok = bool(self._job_list) and self._soa_record and all(
+            isinstance(j.trace, WorkloadTrace)
+            and type(j.trace).sample_indexes is WorkloadTrace.sample_indexes
+            and type(j.trace).phase_at is WorkloadTrace.phase_at
+            and "sample_indexes" not in vars(j.trace)
+            and "phase_at" not in vars(j.trace)
+            for j in self._job_list)
+        self._event_skip = event_skip
+        # earliest step any cycle fit can go stale, cached: fits only
+        # change at/after this boundary, so it is recomputed (O(J)) only
+        # when the clock reaches it — not on every idle tick
+        self._refresh_boundary: Optional[float] = None
+        if self._bulk_ok:
+            self._bulk_tables = self._build_bulk_tables()
         nb = make_training_nb()
         for j in jobs:
             # surveillance window: >=4 observed cycles, else the FFT cannot
@@ -259,8 +295,84 @@ class FleetSim:
                 j.telemetry.record(step,
                                    **j.trace.sample_indexes(self.now, self.rng))
 
+    def _step_times(self, steps: int) -> np.ndarray:
+        """The next ``steps``+1 clock values under the per-second loop's
+        ``now += dt`` accumulation — cumsum reproduces the float rounding
+        of the sequential loop bit-for-bit ([0] is the current clock,
+        [:-1] are the iteration clocks, [-1] is the clock after the last
+        iteration)."""
+        return np.cumsum(np.concatenate([[self.now],
+                                         np.full(steps, self.dt)]))
+
+    def _build_bulk_tables(self):
+        """Per-job phase tables stacked for the bulk recorder: padded
+        phase-end matrix (J, W), per-job last-phase index, cycle, offset,
+        jitter, and the (J, P, F) per-phase load-index means in telemetry
+        field order (the exact scalars ``sample_indexes`` derives per
+        call)."""
+        traces = [j.trace for j in self._job_list]
+        # the rate tables already carry one (end, rate) entry per phase:
+        # reuse their padded stacking (ends inf-padded, one row per job)
+        ends, _, cyc, off = PiecewiseRate.stack(
+            [t.rate_table for t in traces])
+        base = np.zeros((len(traces), ends.shape[1],
+                         len(self.telemetry.fields)))
+        for i, tr in enumerate(traces):
+            for p, n in enumerate(tr._names):
+                base[i, p] = phase_means(n)
+        return (ends, np.asarray([len(t._names) - 1 for t in traces]),
+                cyc, off, np.asarray([t.jitter for t in traces]), base)
+
+    def _record_bulk(self, times: np.ndarray) -> None:
+        """One (S, J, F) telemetry append for the per-step samples at
+        ``times`` — ring contents and rng stream identical to S
+        ``_record_all`` calls (the Generator draws the same normal
+        sequence whether sampled scalar-by-scalar or as one array, and
+        every per-element op mirrors ``WorkloadTrace.sample_indexes``:
+        same modulo/compare phase lookup, same ``v * (1 + jitter * z)``
+        float order). No per-step or per-job Python — phase indices come
+        from one padded compare against the precomputed tables. Callers
+        must have checked ``self._bulk_ok``. Long windows append in
+        bounded step chunks (the rng stream is sequential, so chunked
+        draws equal one big draw): peak scratch stays O(chunk x J x F)
+        instead of O(window x J x F) at 10k-job fleets."""
+        n_jobs, n_fields = len(self._job_list), len(self.telemetry.fields)
+        chunk = max(1, int(4e6 // max(1, n_jobs * n_fields)))
+        for lo in range(0, len(times), chunk):
+            self._record_bulk_chunk(times[lo:lo + chunk], n_jobs,
+                                    n_fields)
+
+    def _record_bulk_chunk(self, times: np.ndarray, n_jobs: int,
+                           n_fields: int) -> None:
+        s = len(times)
+        if s == 0:
+            return
+        ends, last, cyc, off, jitter, base = self._bulk_tables
+        z = self.rng.standard_normal((s, n_jobs, n_fields))
+        tc = np.mod(times[:, None] + off, cyc)             # (S, J)
+        # phase index: count of phase ends <= tc (== searchsorted
+        # side="right"), clamped like PiecewiseRate.index_at
+        idx = np.minimum((tc[:, :, None] >= ends).sum(axis=2), last)
+        vals = np.multiply(z, jitter[None, :, None])
+        vals += 1.0
+        vals *= base[np.arange(n_jobs)[None, :], idx]
+        np.maximum(vals, 0.0, out=vals)
+        self.telemetry.record_fleet_bulk(
+            (times / self.dt).astype(np.int64), vals)
+
     def run_idle(self, seconds: float) -> None:
+        """Advance the clock recording telemetry only (warmup / idle
+        stretches). With the fleet SoA store and stock traces this is one
+        bulk append instead of O(seconds) Python iterations, with
+        bit-identical ring contents, rng stream, and clock."""
         steps = int(seconds / self.dt)
+        if steps <= 0:
+            return
+        if self._event_skip and self._bulk_ok:
+            nows = self._step_times(steps)
+            self._record_bulk(nows[:-1])
+            self.now = float(nows[-1])
+            return
         for _ in range(steps):
             self._record_all()
             self.now += self.dt
@@ -271,6 +383,51 @@ class FleetSim:
         if self.placement is not None and not req.src:
             req.src = self.placement.host_of(req.job_id) or ""
         req.path = self.topology.path(req.src, req.dst)
+
+    def _skip_idle_steps(self, pending: Sequence[MigrationRequest],
+                         t_end: float) -> None:
+        """Fast-forward over per-second iterations that would be pure
+        telemetry: nothing in flight, no arrival due, no heap release,
+        and no surveillance epoch going stale. The clock jumps straight
+        to the next pending arrival / LMCM due / refresh boundary (or the
+        horizon), bulk-appending the skipped samples — ring contents, rng
+        stream, clock accumulation, and every fit/decision are
+        bit-identical to ticking one second at a time (skipped iterations
+        are provably no-ops: ``refresh()`` touches nothing before the
+        stale boundary and ``due()`` pops nothing before the heap head).
+        """
+        nxt_arr = pending[0].created_at if pending else np.inf
+        nxt_due = self.lmcm.next_due_time()
+        now_step = int(self.now / self.dt)
+        if not self.lmcm.uses_surveillance:
+            # no-surveillance policies never tick the engine (no fits to
+            # keep on schedule): only arrivals and the heap bound skips
+            nxt_refresh = np.inf
+        else:
+            # a fit can only change at/after the cached boundary (a job
+            # is stale no earlier than it), so the O(J) engine scan runs
+            # once per boundary, not once per idle tick
+            if (self._refresh_boundary is None
+                    or now_step >= self._refresh_boundary):
+                self._refresh_boundary = \
+                    self.lmcm.engine.next_refresh_step(now_step)
+            nxt_refresh = self._refresh_boundary
+        # candidate iteration count (slack-padded estimate; the exact
+        # prefix is re-checked on the generated clocks below)
+        bound = min(t_end, nxt_arr, nxt_due,
+                    self.now + (nxt_refresh - now_step) * self.dt)
+        cap = int(max(0.0, (bound - self.now) / self.dt)) + 1
+        if cap <= 1:
+            return
+        nows = self._step_times(cap)
+        cand = nows[:-1]                       # per-iteration clocks
+        safe = ((cand < t_end) & (cand < nxt_arr) & (cand < nxt_due)
+                & ((cand / self.dt).astype(np.int64) < nxt_refresh))
+        stop = int(np.argmin(safe)) if not safe.all() else cap
+        if stop <= 0:
+            return
+        self._record_bulk(cand[:stop])
+        self.now = float(nows[stop])
 
     def run_with_plan(self, plan: Sequence[MigrationRequest],
                       horizon_s: float = 3600.0) -> SimResult:
@@ -286,12 +443,24 @@ class FleetSim:
         while self.now < t_end and (pending or self.lmcm.queue
                                     or self.lmcm.running
                                     or self.plane.in_flight):
+            if (self._event_skip and self._bulk_ok
+                    and self.plane.in_flight == 0
+                    and not self.plane._pending
+                    and (pending or self.lmcm.queue)):
+                self._skip_idle_steps(pending, t_end)
+                if self.now >= t_end:
+                    break
             while pending and pending[0].created_at <= self.now:
                 req = pending.pop(0)
                 self._tag_request(req)
                 self.lmcm.submit(req, self.now)
             self._record_all()
-            self.lmcm.tick(self.now)           # batched fleet surveillance
+            if self.lmcm.uses_surveillance:
+                # batched fleet surveillance (the immediate baseline is
+                # the paper's no-surveillance policy: it never reads a
+                # cycle fit, so refreshing fits for it would be pure
+                # waste at fleet scale)
+                self.lmcm.tick(self.now)
             for req in self.lmcm.due(self.now):
                 job = self.jobs[req.job_id]
                 # accuracy metric (Figs. 8-9): did we fire in a non-MEM phase?

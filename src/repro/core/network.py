@@ -21,6 +21,17 @@ a single flat link. This module provides that model:
     share, and redistribute the slack to the remaining flows.
     ``fair_share_dense`` is the same algorithm over a precomputed link x
     lane incidence matrix — the migration plane's per-event hot path.
+    ``fair_share_masked`` batches K *scenarios* (lane subsets of one
+    incidence) through one stacked filling — the adaptive controller's
+    defer-k prefix sweep solves all n+1 "launch the first k" batches in a
+    single call.
+  * ``LinkUnionFind`` — path-compressed, size-balanced union-find over
+    link ids with a per-root link-membership set. Migration domains are
+    connected components of "shares a link"; the fabric and the adaptive
+    controller both key them by link through this structure, so a
+    launch/merge is O(alpha) instead of a scan over every live domain
+    (or, in the controller's old grouping, O(n^2) pairwise set
+    intersections).
 
 Migration domains: two transfers interact iff their paths share a link.
 Because shared (core) links are only on *cross-domain* paths, transfers
@@ -31,7 +42,8 @@ separately, and a domain's trajectory is bit-equal to running it alone.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, \
+    Set, Tuple, Union
 
 import numpy as np
 
@@ -243,3 +255,189 @@ def fair_share_dense(incidence: np.ndarray, capacities: np.ndarray
     """One-shot ``DenseFairShare`` (tests / callers without a cached
     incidence); the plane holds a solver instance instead."""
     return DenseFairShare(incidence, capacities)().copy()
+
+
+def fair_share_masked(incidence: np.ndarray, capacities: np.ndarray,
+                      active: np.ndarray) -> np.ndarray:
+    """Max-min fair shares for K lane subsets of ONE (L, M) incidence.
+
+    ``active`` is a (K, M) bool mask: row k is an independent progressive-
+    filling scenario over the lanes it selects (the other columns are
+    absent — zero demand, zero membership). Returns (K, M) rates: inactive
+    lanes get 0, active lanes crossing no link get ``inf``.
+
+    This is the stacked solver behind the defer-k prefix sweep: the n+1
+    nested "launch the first k candidates" batches differ only in their
+    active mask, so every per-scenario quantity — per-link live-lane
+    counts, committed bandwidth, the candidate share — is one (K, L) ufunc
+    or matmul, and each iteration freezes at least one link per open
+    scenario (<= L+1 iterations total, vs K full solves).
+
+    Per scenario the arithmetic is per-link-local, exactly as in
+    ``DenseFairShare``: a link's remaining capacity and live count involve
+    only its member lanes, so the values a scenario's lanes freeze at do
+    not depend on which other scenarios (or which disjoint sub-components)
+    share the call.
+    """
+    inc = np.ascontiguousarray(incidence, np.float64)
+    caps = np.asarray(capacities, np.float64)
+    active = np.asarray(active, bool)
+    k_n, m = active.shape
+    n_links = inc.shape[0]
+    rates = np.zeros((k_n, m))
+    if n_links == 0:                     # no links: every active lane is
+        rates[active] = np.inf           # unconstrained
+        return rates
+    live = active.astype(np.float64)
+    inc_t = np.ascontiguousarray(inc.T)              # (M, L)
+    n_live = np.empty((k_n, n_links))
+    used = np.empty((k_n, n_links))
+    share = np.empty((k_n, n_links))
+    occupied = np.empty((k_n, n_links), bool)
+    mask = np.empty((k_n, m), bool)
+    rows = np.arange(k_n)
+    while True:
+        np.matmul(live, inc_t, out=n_live)
+        np.matmul(rates, inc_t, out=used)
+        np.subtract(caps, used, out=share)
+        np.maximum(share, 0.0, out=share)
+        np.greater(n_live, 0.0, out=occupied)
+        np.divide(share, n_live, out=share, where=occupied)
+        np.copyto(share, np.inf, where=~occupied)
+        l_star = np.argmin(share, axis=1)            # (K,) per-scenario
+        s = share[rows, l_star]                      # bottleneck share
+        open_k = np.isfinite(s)
+        if not open_k.any():
+            break
+        # freeze each open scenario's bottleneck members at its share
+        np.greater(inc[l_star], 0.0, out=mask)       # gather rows: (K, M)
+        np.logical_and(mask, live > 0.0, out=mask)
+        np.logical_and(mask, open_k[:, None], out=mask)
+        np.copyto(rates, s[:, None], where=mask)
+        np.copyto(live, 0.0, where=mask)
+    rates[live > 0.0] = np.inf           # active lanes crossing no link
+    return rates
+
+
+def build_incidence(paths: Sequence[Sequence[str]],
+                    capacities: Dict[str, float]
+                    ) -> Tuple[np.ndarray, np.ndarray, List[str],
+                               Dict[str, int]]:
+    """First-appearance link order, (L, M) 0/1 incidence, capacity
+    vector, and link->row map for ``paths`` — the ONE construction behind
+    both the migration plane's cached banks and the stacked prefix sweep
+    (their bit-parity depends on sharing the same dedup/ordering)."""
+    order = list(dict.fromkeys(l for p in paths for l in p))
+    row = {l: i for i, l in enumerate(order)}
+    inc = np.zeros((len(order), len(paths)))
+    for j, p in enumerate(paths):
+        for l in dict.fromkeys(p):
+            inc[row[l], j] = 1.0
+    return inc, np.asarray([capacities[l] for l in order]), order, row
+
+
+def what_if_prefix_shares(base_paths: Sequence[Sequence[str]],
+                          fixed_paths: Sequence[Sequence[str]],
+                          cand_paths: Sequence[Sequence[str]],
+                          capacities: Dict[str, float],
+                          fallback_bw: float) -> np.ndarray:
+    """Fair shares of all n+1 nested defer-k launch batches in one solve.
+
+    Row k of the returned (n+1, F+n) array holds the max-min shares the F
+    ``fixed_paths`` lanes plus the first k ``cand_paths`` lanes would
+    realize against the ``base_paths`` lanes already in flight — i.e. the
+    answers of n+1 ``fair_share(base + fixed + cand[:k])`` calls, read
+    from ONE (L, M) incidence with one ``fair_share_masked`` invocation.
+    Active lanes crossing no link get ``fallback_bw``; columns past F+k
+    are inactive in row k and read 0.
+    """
+    paths = [tuple(p) for p in base_paths] + [tuple(p) for p in fixed_paths]
+    cand = [tuple(p) for p in cand_paths]
+    n_base_fixed, n = len(paths), len(cand)
+    paths += cand
+    inc, caps_vec, _, _ = build_incidence(paths, capacities)
+    active = np.zeros((n + 1, len(paths)), bool)
+    active[:, :n_base_fixed] = True
+    # row k launches candidates 0..k-1
+    active[:, n_base_fixed:] = np.tril(np.ones((n + 1, n), bool), -1)
+    shares = fair_share_masked(inc, caps_vec, active)[:, len(base_paths):]
+    return np.where(np.isfinite(shares), shares, fallback_bw)
+
+
+class LinkUnionFind:
+    """Path-compressed, size-balanced union-find over link ids, with a
+    per-root membership set (the links of each component).
+
+    Migration domains are connected components of the "shares a link"
+    relation; keying them by link makes domain lookup/merge O(alpha):
+    ``ShardedPlane`` resolves a launch path to its domains with one
+    ``find`` per link (instead of scanning every live domain's link set)
+    and the adaptive controller's candidate grouping unions paths in
+    near-linear time (instead of quadratic pairwise set intersections).
+    Components can be deleted wholesale (``pop_component``) — the fabric
+    dissolves a domain when its lanes drain.
+    """
+
+    __slots__ = ("_parent", "_size", "_links")
+
+    def __init__(self) -> None:
+        self._parent: Dict[str, str] = {}
+        self._size: Dict[str, int] = {}
+        self._links: Dict[str, Set[str]] = {}
+
+    def add(self, link: str) -> str:
+        """Register ``link`` as a singleton component (no-op if present);
+        returns its root."""
+        if link not in self._parent:
+            self._parent[link] = link
+            self._size[link] = 1
+            self._links[link] = {link}
+            return link
+        return self.find(link)
+
+    def find(self, link: str) -> Optional[str]:
+        """Root of ``link``'s component (None if unregistered), with
+        path compression."""
+        parent = self._parent
+        root = parent.get(link)
+        if root is None:
+            return None
+        while parent[root] != root:
+            root = parent[root]
+        while parent[link] != root:      # compress
+            parent[link], link = root, parent[link]
+        return root
+
+    def union(self, a: str, b: str) -> str:
+        """Join the components of ``a`` and ``b`` (registering either as
+        needed); returns the merged root. Size-balanced: the smaller
+        root's membership set folds into the larger's."""
+        ra, rb = self.add(a), self.add(b)
+        if ra == rb:
+            return ra
+        if self._size[ra] < self._size[rb]:
+            ra, rb = rb, ra
+        self._parent[rb] = ra
+        self._size[ra] += self._size.pop(rb)
+        self._links[ra] |= self._links.pop(rb)
+        return ra
+
+    def union_path(self, path: Iterable[str]) -> Optional[str]:
+        """Union every link of ``path`` into one component; returns its
+        root (None for an empty path)."""
+        root: Optional[str] = None
+        for l in path:
+            root = self.add(l) if root is None else self.union(root, l)
+        return root
+
+    def pop_component(self, link: str) -> Set[str]:
+        """Delete ``link``'s entire component (a drained domain's links
+        revert to unregistered); returns the removed membership set."""
+        root = self.find(link)
+        if root is None:
+            return set()
+        links = self._links.pop(root)
+        for l in links:
+            del self._parent[l]
+        del self._size[root]
+        return links

@@ -133,6 +133,14 @@ class LMCM:
         # it replaces the static share-floor gate at the release boundary
         self.controller = None
 
+    @property
+    def uses_surveillance(self) -> bool:
+        """Whether this policy reads cycle fits at all — ``immediate``
+        is the paper's no-surveillance baseline (Fig. 5a), so a
+        simulator may skip its per-step engine ticks and staleness
+        boundaries entirely."""
+        return self.policy != "immediate"
+
     # -- registration --------------------------------------------------------
     def register_job(self, job_id: str, telemetry: TelemetryBuffer,
                      nb: characterize.NaiveBayes, *, window: int = 512,
@@ -286,6 +294,14 @@ class LMCM:
         if req.decision in ("pending", "scheduled"):
             req.decision = "cancelled"
             self.log.append(req)
+
+    def next_due_time(self) -> float:
+        """Earliest heap fire time (``inf`` when the queue is idle) — the
+        event-skipping simulator's release horizon. Stale entries (from
+        cancel/resubmit) are included: they make the bound conservative
+        (the skipped window only shrinks), never wrong, and a stale pop
+        at the boundary is a cheap no-op."""
+        return self.queue[0][0] if self.queue else float("inf")
 
     def due(self, now: float) -> List[MigrationRequest]:
         """Pop requests whose moment has come, honoring max_concurrent and

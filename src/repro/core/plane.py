@@ -97,10 +97,16 @@ class MigrationPlane:
         self._down = np.zeros(0)
         self._phase = np.zeros(0, np.int8)
         self._reason = np.zeros(0, np.int8)
-        # vectorized-chunk banks, rebuilt lazily on membership change
+        # vectorized-chunk banks: extended in place on launch/merge,
+        # rebuilt lazily only after lane drops. Membership fair shares
+        # and scratch sizing are deferred separately (_shares_stale): a
+        # release burst extends the banks B times but solves ONCE, at
+        # the next advance.
         self._banks_stale = True
+        self._shares_stale = False
         self._rates: Optional[RateBank] = None
         self._link_order: List[str] = []
+        self._link_row: Dict[str, int] = {}
         self._inc = np.zeros((0, 0))         # (L, M) float incidence
         self._caps_vec = np.zeros(0)
         self._link_vec = np.zeros(0)         # per-chunk byte accumulator
@@ -175,6 +181,19 @@ class MigrationPlane:
         shares = network.fair_share(paths, self.caps)[len(self._meta):]
         return np.where(np.isfinite(shares), shares, self._fallback_bw)
 
+    def what_if_shares_sweep(self, fixed_paths: Sequence[Sequence[str]],
+                             cand_paths: Sequence[Sequence[str]]
+                             ) -> np.ndarray:
+        """All n+1 nested what-if batches of the defer-k sweep in ONE
+        stacked solve: row k holds the fair shares of the F ``fixed_paths``
+        lanes plus the first k ``cand_paths`` lanes, all launched right now
+        alongside everything in flight (columns past F+k are inactive and
+        read 0). Equivalent to n+1 ``what_if_shares`` calls over growing
+        prefixes; see ``network.fair_share_masked``."""
+        return network.what_if_prefix_shares(
+            [m.path for m in self._meta], fixed_paths, cand_paths,
+            self.caps, self._fallback_bw)
+
     def path_capacity(self, src: str, dst: str) -> float:
         """Uncontended capacity of the src->dst path: the tightest link a
         lone migration would traverse (the launch gate's floor reference —
@@ -212,7 +231,8 @@ class MigrationPlane:
         p = tuple(path) if path is not None else \
             self.topology.path(req.src, req.dst)
         v = float(req.v_bytes)
-        self._meta.append(_LaneMeta(req, rate, rate_fn, p, now))
+        meta = _LaneMeta(req, rate, rate_fn, p, now)
+        self._meta.append(meta)
         self._v = np.append(self._v, v)
         self._rem = np.append(self._rem, v)
         self._round = np.append(self._round, v)
@@ -222,7 +242,10 @@ class MigrationPlane:
         self._down = np.append(self._down, 0.0)
         self._phase = np.append(self._phase, _COPY)
         self._reason = np.append(self._reason, strunk.REASON_MAX_ROUNDS)
-        self._banks_stale = True
+        if self._banks_fresh:
+            self._extend_banks(meta)     # O(1) Python, no membership rescan
+        else:
+            self._banks_stale = True
         if self._link_set_cache is not None:
             self._link_set_cache = self._link_set_cache | frozenset(p)
 
@@ -237,27 +260,32 @@ class MigrationPlane:
     def _rebuild_banks(self) -> None:
         """Re-derive the rate bank, link incidence, caps vector, and the
         event-chunk scratch buffers from the current lane membership
-        (lazily, after launches/drops/merges)."""
+        (lazily, after lane drops — launches and domain merges extend the
+        banks in place instead, see ``_extend_banks``/``_merge_banks``)."""
         self._fold_link_vec()
         self._rates = RateBank([m.spec for m in self._meta])
-        order = list(dict.fromkeys(l for m in self._meta for l in m.path))
-        self._link_order = order
-        row = {l: k for k, l in enumerate(order)}
-        n = len(self._meta)
-        self._inc = np.zeros((len(order), n))
-        for i, m in enumerate(self._meta):
-            for l in dict.fromkeys(m.path):
-                self._inc[row[l], i] = 1.0
-        self._caps_vec = np.asarray([self.caps[l] for l in order])
-        self._link_vec = np.zeros(len(order))
+        self._inc, self._caps_vec, self._link_order, self._link_row = \
+            network.build_incidence([m.path for m in self._meta],
+                                    self.caps)
+        self._link_vec = np.zeros(len(self._link_order))
         self._job_ids = [m.req.job_id for m in self._meta]
+        self._refresh_shares()
+        self._alloc_scratch()
+        self._banks_stale = False
+        self._shares_stale = False
+
+    def _refresh_shares(self) -> None:
         # fair shares are a function of lane MEMBERSHIP only (paths + link
-        # capacities — not of per-round state), so one solve per rebuild
-        # covers every chunk until the next launch/drop/merge
+        # capacities — not of per-round state), so one solve per
+        # rebuild/extend/merge covers every chunk until the next
+        # launch/drop/merge
         shares = network.DenseFairShare(self._inc, self._caps_vec)()
         np.copyto(shares, self._fallback_bw, where=~np.isfinite(shares))
         self._share_cache = shares
+
+    def _alloc_scratch(self) -> None:
         # per-chunk scratch: the event loop below is all in-place ufuncs
+        n = len(self._meta)
         self._b_tdone = np.empty(n)
         self._b_mask = np.empty(n, bool)
         self._b_complete = np.empty(n, bool)
@@ -265,8 +293,63 @@ class MigrationPlane:
         self._b_f1 = np.empty(n)
         self._b_f2 = np.empty(n)
         self._b_moved = np.empty(n)
-        self._b_ltmp = np.empty(len(order))
-        self._banks_stale = False
+        self._b_ltmp = np.empty(len(self._link_order))
+
+    @property
+    def _banks_fresh(self) -> bool:
+        return self.vectorized and not self._banks_stale \
+            and self._rates is not None
+
+    def _extend_banks(self, meta: _LaneMeta) -> None:
+        """Append one freshly launched lane to the live banks in place —
+        the launch-time alternative to a full ``_rebuild_banks`` (no
+        per-lane Python over the existing membership). Produces exactly
+        the state a rebuild would: new links keep first-appearance order
+        (the new lane is last), table rows gather/concatenate into the
+        identical padded layout, and the membership fair-share solve runs
+        over the extended incidence."""
+        self._rates = RateBank.concat(self._rates, RateBank([meta.spec]))
+        new_links = [l for l in dict.fromkeys(meta.path)
+                     if l not in self._link_row]
+        for l in new_links:
+            self._link_row[l] = len(self._link_order)
+            self._link_order.append(l)
+        n_links, n = len(self._link_order), len(self._meta)
+        inc = np.zeros((n_links, n))
+        inc[:self._inc.shape[0], :self._inc.shape[1]] = self._inc
+        for l in dict.fromkeys(meta.path):
+            inc[self._link_row[l], n - 1] = 1.0
+        self._inc = inc
+        if new_links:
+            self._caps_vec = np.concatenate(
+                [self._caps_vec, [self.caps[l] for l in new_links]])
+            self._link_vec = np.concatenate(
+                [self._link_vec, np.zeros(len(new_links))])
+        self._job_ids.append(meta.req.job_id)
+        self._shares_stale = True        # ONE solve at the next advance
+
+    def _merge_banks(self, other: "MigrationPlane") -> None:
+        """Stitch ``other``'s live banks onto this plane's — the
+        domain-merge alternative to a full rebuild. The two domains are
+        disjoint by construction (they merge because a NEW lane bridges
+        them), so the merged incidence is block-diagonal and the link
+        order is this plane's followed by the other's — exactly what a
+        rebuild over the concatenated lane list derives."""
+        self._rates = RateBank.concat(self._rates, other._rates)
+        off = len(self._link_order)
+        for l in other._link_order:
+            self._link_row[l] = off + other._link_row[l]
+        self._link_order = self._link_order + other._link_order
+        l1, m1 = self._inc.shape
+        l2, m2 = other._inc.shape
+        inc = np.zeros((l1 + l2, m1 + m2))
+        inc[:l1, :m1] = self._inc
+        inc[l1:, m1:] = other._inc
+        self._inc = inc
+        self._caps_vec = np.concatenate([self._caps_vec, other._caps_vec])
+        self._link_vec = np.zeros(l1 + l2)   # both folded by the caller
+        self._job_ids = self._job_ids + other._job_ids
+        self._shares_stale = True        # ONE solve at the next advance
 
     def advance(self, until: float):
         """Run the event loop to ``until`` (or until drained); returns the
@@ -279,6 +362,10 @@ class MigrationPlane:
             if self.vectorized:
                 if self._banks_stale:
                     self._rebuild_banks()
+                elif self._shares_stale:
+                    self._refresh_shares()
+                    self._alloc_scratch()
+                    self._shares_stale = False
                 # membership-cached fair shares + time-to-completion
                 mask, t_done = self._b_mask, self._b_tdone
                 shares = self._share_cache
@@ -423,6 +510,12 @@ class MigrationPlane:
         other.now = self.now                         # snap within tolerance
         other._fold_link_vec()
         self._fold_link_vec()
+        # disjoint domains (the normal fabric merge) stitch their live
+        # banks instead of flagging a rebuild; overlapping-link planes
+        # (possible when called directly) fall back to the lazy rebuild
+        incremental = (self._banks_fresh and other._banks_fresh
+                       and not any(l in self._link_row
+                                   for l in other._link_order))
         self._meta.extend(other._meta)
         for name in ("_v", "_rem", "_round", "_acc", "_sent",
                      "_rounds", "_down", "_phase", "_reason"):
@@ -432,6 +525,9 @@ class MigrationPlane:
             self._link_bytes[l] = self._link_bytes.get(l, 0.0) + b
         self._backlog.extend(other._backlog)
         other._meta, other._backlog = [], []
-        self._banks_stale = True
+        if incremental:
+            self._merge_banks(other)
+        else:
+            self._banks_stale = True
         self._link_set_cache = None
         other._link_set_cache = None

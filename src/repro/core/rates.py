@@ -71,10 +71,13 @@ class PiecewiseRate:
         return float(self.rates[self.index_at(t)])
 
     @staticmethod
-    def batch(lanes: Sequence["PiecewiseRate"]
-              ) -> Callable[[np.ndarray], np.ndarray]:
-        """One vectorized rate function over (M,) lanes: maps the (M,) time
-        array to (M,) rates in a single padded table lookup."""
+    def stack(lanes: Sequence["PiecewiseRate"]
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Pad M tables into one (ends, rates, cycle, offset) array set —
+        the storable form behind ``batch`` and ``RateBank``. Padding rule:
+        ``ends`` extend with inf (never matched), ``rates`` replicate each
+        row's last value, so any further right-padding of a stacked row is
+        idempotent (``RateBank.concat`` re-pads to a common width)."""
         m = len(lanes)
         width = max(len(l.rates) for l in lanes)
         ends = np.full((m, width), np.inf)
@@ -86,6 +89,16 @@ class PiecewiseRate:
             rates[i, n:] = l.rates[-1]
         cyc = np.asarray([l.cycle for l in lanes])
         off = np.asarray([l.offset for l in lanes])
+        return ends, rates, cyc, off
+
+    @staticmethod
+    def lookup_fn(ends: np.ndarray, rates: np.ndarray, cyc: np.ndarray,
+                  off: np.ndarray) -> Callable[[np.ndarray], np.ndarray]:
+        """The vectorized (M,) time -> (M,) rate lookup over stacked
+        tables (see ``stack``). Per-lane arithmetic is independent of the
+        stack's width and row order, so gathered/concatenated stacks
+        sample bit-identically to freshly built ones."""
+        m, width = rates.shape
         # flat-table lookup with persistent scratch: per-phase column
         # compares (W is tiny) + in-place ufuncs beat a (M, W)
         # broadcast+reduce by ~5x in numpy dispatch overhead — this sits on
@@ -110,6 +123,13 @@ class PiecewiseRate:
         fn.vectorized = True
         fn.nonneg = bool(np.all(rates >= 0.0))
         return fn
+
+    @staticmethod
+    def batch(lanes: Sequence["PiecewiseRate"]
+              ) -> Callable[[np.ndarray], np.ndarray]:
+        """One vectorized rate function over (M,) lanes: maps the (M,) time
+        array to (M,) rates in a single padded table lookup."""
+        return PiecewiseRate.lookup_fn(*PiecewiseRate.stack(lanes))
 
 
 RateSpec = Union[None, float, PiecewiseRate, Callable[[float], float]]
@@ -143,19 +163,39 @@ class RateBank:
     returns the (M,) dirty rates at scalar time ``t`` — one padded lookup
     for every table lane, a scalar call per fallback lane still in its
     copy phase (matching the reference loop's call pattern bit-for-bit).
+
+    The padded tables are stored as plain arrays, so banks compose
+    without re-normalizing specs: ``concat`` stitches two banks (the
+    fabric merges the banks of two bridged migration domains instead of
+    rebuilding from the lane list), ``take`` gathers arbitrary rows into
+    a derived bank (the defer-k sweep prices all n+1 nested prefixes
+    through ONE bank built from the n unique candidate tables). Both are
+    numpy copies — no per-lane Python — and both sample bit-identically
+    to a freshly built bank (per-row lookups are width/order agnostic).
     """
 
     def __init__(self, specs: Sequence[RateSpec]):
-        self.m = len(specs)
         tables: List[PiecewiseRate] = []
-        self.fallback: List[Tuple[int, Callable[[float], float]]] = []
+        fallback: List[Tuple[int, Callable[[float], float]]] = []
         for i, spec in enumerate(specs):
             table = as_rate_table(spec)
             if table is None:
-                self.fallback.append((i, spec))
+                fallback.append((i, spec))
                 table = PiecewiseRate([1.0], [0.0])   # placeholder row
             tables.append(table)
-        self._lookup = PiecewiseRate.batch(tables) if tables else None
+        self._init_arrays(
+            *(PiecewiseRate.stack(tables) if tables
+              else (np.full((0, 1), np.inf), np.zeros((0, 1)),
+                    np.zeros(0), np.zeros(0))),
+            fallback)
+
+    def _init_arrays(self, ends, rates, cyc, off, fallback) -> None:
+        self.m = len(cyc)
+        self._ends, self._rates = ends, rates
+        self._cyc, self._off = cyc, off
+        self.fallback = fallback
+        self._lookup = PiecewiseRate.lookup_fn(ends, rates, cyc, off) \
+            if self.m else None
         # public view of the stacked lookup: an (M,) time array -> (M,)
         # rates callable (``.vectorized``/``.nonneg`` set), valid whenever
         # ``fallback`` is empty — strunk's what-if costing reuses it to
@@ -163,6 +203,56 @@ class RateBank:
         self.table_fn = self._lookup
         self._t = np.empty(self.m)
         self._out = np.empty(self.m)
+
+    @classmethod
+    def _from_arrays(cls, ends, rates, cyc, off, fallback) -> "RateBank":
+        bank = cls.__new__(cls)
+        bank._init_arrays(ends, rates, cyc, off, fallback)
+        return bank
+
+    @staticmethod
+    def _pad_to(ends: np.ndarray, rates: np.ndarray, width: int
+                ) -> Tuple[np.ndarray, np.ndarray]:
+        """Right-pad stacked tables to ``width`` columns under the
+        ``PiecewiseRate.stack`` padding rule (idempotent: trailing rate
+        columns already replicate each row's last valid value)."""
+        m, w = rates.shape
+        if w >= width:
+            return ends, rates
+        e = np.full((m, width), np.inf)
+        r = np.empty((m, width))
+        e[:, :w] = ends
+        r[:, :w] = rates
+        r[:, w:] = rates[:, w - 1:w]
+        return e, r
+
+    @classmethod
+    def concat(cls, a: "RateBank", b: "RateBank") -> "RateBank":
+        """Bank holding ``a``'s lanes followed by ``b``'s — array
+        concatenation only (no spec re-normalization); rows sample
+        bit-identically to a rebuild over the combined lane list."""
+        width = max(a._rates.shape[1], b._rates.shape[1])
+        ea, ra = cls._pad_to(a._ends, a._rates, width)
+        eb, rb = cls._pad_to(b._ends, b._rates, width)
+        fallback = list(a.fallback) + [(i + a.m, fn) for i, fn in b.fallback]
+        return cls._from_arrays(
+            np.concatenate([ea, eb]), np.concatenate([ra, rb]),
+            np.concatenate([a._cyc, b._cyc]),
+            np.concatenate([a._off, b._off]), fallback)
+
+    def take(self, idx: np.ndarray) -> "RateBank":
+        """Bank whose lane ``j`` is this bank's lane ``idx[j]`` (rows may
+        repeat) — one fancy-index gather."""
+        idx = np.asarray(idx, np.intp)
+        if self.fallback:
+            by_row = dict(self.fallback)
+            fallback = [(j, by_row[int(i)]) for j, i in enumerate(idx)
+                        if int(i) in by_row]
+        else:
+            fallback = []
+        return self._from_arrays(
+            self._ends[idx], self._rates[idx], self._cyc[idx],
+            self._off[idx], fallback)
 
     def sample(self, t: float, copy_mask: np.ndarray) -> np.ndarray:
         """(M,) rates at time ``t``; fallback lanes are sampled only while

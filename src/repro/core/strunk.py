@@ -314,20 +314,35 @@ def expected_cost_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
     return out if full else out.bytes_sent
 
 
-def what_if_cost_batch(v_mem, bandwidth, rate_specs: Sequence, start_times,
+def what_if_cost_batch(v_mem, bandwidth, rate_specs, start_times,
                        *, full: bool = False):
     """``expected_cost_batch`` over (M,) *hypothetical* lanes whose dirty
     rates are given as lane-registration specs (``core/rates.py``: tables,
-    constants, ``rate_table`` objects, plain callables, None).
+    constants, ``rate_table`` objects, plain callables, None) — or as an
+    already-built ``RateBank`` whose row ``i`` is lane ``i``'s table.
 
-    The specs are normalized through the same ``RateBank`` the execution
-    plane registers its lanes with, so an all-tabular candidate batch
-    samples every lane's rate in ONE padded lookup per round — the entry
-    point the adaptive concurrency controller (``core/controller.py``)
-    uses to price a whole defer-k sweep without per-lane Python. Lanes
+    Spec sequences are normalized through the same ``RateBank`` the
+    execution plane registers its lanes with, so an all-tabular candidate
+    batch samples every lane's rate in ONE padded lookup per round — the
+    entry point the adaptive concurrency controller
+    (``core/controller.py``) uses to price a whole defer-k sweep without
+    per-lane Python. Passing a ``RateBank`` directly skips even that
+    normalization: the stacked defer-k sweep builds one bank over its
+    unique candidate tables and ``take``-gathers the flattened prefix
+    layout, so pricing all n+1 prefixes re-normalizes nothing. Lanes
     whose spec cannot be tabulated fall back to per-lane sampling.
     """
     from repro.core.rates import RateBank, as_rate_table
+    if isinstance(rate_specs, RateBank):
+        bank = rate_specs
+        if bank.m == 0:
+            return expected_cost_batch(np.zeros(0), bandwidth, 0.0,
+                                       np.zeros(0), full=full)
+        if bank.fallback:
+            raise ValueError("RateBank inputs must be fully tabular "
+                             "(fallback callables need per-lane specs)")
+        return expected_cost_batch(v_mem, bandwidth, bank.table_fn,
+                                   start_times, full=full)
     specs = list(rate_specs)
     if not specs:
         return expected_cost_batch(np.zeros(0), bandwidth, 0.0,

@@ -126,6 +126,35 @@ class SurveillanceEngine:
             return advanced >= max(1, job.model.period // 4)
         return advanced >= self.acyclic_refit
 
+    def next_refresh_step(self, now_step: int) -> float:
+        """Earliest telemetry step at which ANY registered job's cycle fit
+        becomes stale, assuming telemetry stays dense (one sample per
+        step) — the event-skipping simulator's surveillance horizon: a
+        per-step ``refresh()`` is a pure no-op strictly before this step,
+        so the simulator may jump straight to it without changing any
+        fit (``inf`` when no job will ever go stale, e.g. an empty
+        fleet). Jobs with no samples yet are assumed to record their
+        FIRST sample at ``now_step`` (callers pass the step about to be
+        recorded), so they reach ``min_samples`` at
+        ``now_step + min_samples - 1``."""
+        nxt = np.inf
+        if not self.jobs:
+            return nxt
+        jobs = list(self.jobs.values())
+        for job, latest in zip(jobs, self._latest_steps(jobs)):
+            base = int(latest) if latest >= 0 else now_step - 1
+            ready = base + max(0, self.min_samples - len(job.telemetry))
+            if job.fitted_step < 0:
+                cand = ready                    # stale on first full window
+            else:
+                if job.model is not None and job.model.period > 1:
+                    thresh = max(1, job.model.period // 4)
+                else:
+                    thresh = self.acyclic_refit
+                cand = max(ready, job.fitted_step + thresh)
+            nxt = min(nxt, cand)
+        return nxt
+
     # -- the batched pipeline ----------------------------------------------
     def refresh(self, job_ids: Optional[List[str]] = None,
                 *, force: bool = False) -> int:

@@ -187,6 +187,32 @@ class FleetTelemetry:
             self._steps[rows, i] = step
             self._n += 1
 
+    def record_fleet_bulk(self, steps: np.ndarray,
+                          values: np.ndarray) -> None:
+        """Append S fleet rows in one call — ring contents (slots, step
+        stamps, counts) identical to S successive ``record_fleet`` calls.
+        ``steps``: (S,), ``values``: (S, J, F). The event-skipping
+        simulator uses this to land a whole skipped window's telemetry
+        without S Python iterations; appends past a full wrap keep only
+        the surviving tail (earlier rows would be overwritten anyway)
+        while still advancing every job's sample count by S."""
+        steps = np.asarray(steps, np.int64)
+        values = np.asarray(values, np.float64)
+        s = steps.shape[0]
+        if s == 0:
+            return
+        with self._lock:
+            if s > self.capacity:        # only the tail survives the wrap
+                drop = s - self.capacity
+                steps, values = steps[drop:], values[drop:]
+                self._n += drop
+                s = self.capacity
+            idx = (self._n[:, None] + np.arange(s)) % self.capacity  # (J, S)
+            rows = np.arange(self.n_jobs)[:, None]
+            self._data[rows, idx] = values.transpose(1, 0, 2)
+            self._steps[rows, idx] = steps[None, :]
+            self._n += s
+
     def record_job(self, index: int, step: int, **indexes: float) -> None:
         with self._lock:
             i = int(self._n[index] % self.capacity)

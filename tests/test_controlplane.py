@@ -1,0 +1,438 @@
+"""One-solve control plane: stacked defer-k sweep parity, union-find
+domain maintenance parity, and the event-skipping FleetSim's bit-identity
+with the per-second loop.
+
+The load-bearing contracts (ISSUE 5):
+
+  * the stacked prefix sweep (one masked fair-share solve + one flattened
+    pre-copy batch) selects the SAME k with the SAME (bytes, time, -k)
+    score tuple as the kept per-k reference loop, over random topologies,
+    queue orders, and forced/max-wait mixes;
+  * ``fair_share_masked`` rows obey the same max-min invariants as the
+    sparse solver, scenario by scenario, and ``what_if_shares_sweep``
+    row k equals ``what_if_shares`` of the k-prefix;
+  * union-find domain bookkeeping (launch/merge/drain) produces the same
+    domain partitions and the same ``probe_bandwidth`` answers as the
+    PR 4 connected-components scan it replaced — including the
+    partially-drained-domain case where a link's last live lane completed
+    but its domain still runs (the link must NOT match new launches);
+  * ``run_idle`` and ``run_with_plan`` with event skipping are
+    bit-identical to the per-second loop: telemetry ring, rng stream,
+    clock, fits, and every migration outcome.
+
+Hypothesis drives the search when installed; the ``_seeded`` variants run
+the same invariants over fixed random sweeps so clean containers still
+execute them.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import network
+from repro.core.controller import AdaptiveConcurrencyController
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import FleetSim, SimJob, WorkloadTrace, \
+    table3_traces
+from repro.core.orchestrator import MigrationRequest
+from repro.core.rates import PiecewiseRate
+
+CAP = 125e6
+
+
+# ---------------------------------------------------------------------------
+# stacked sweep vs per-k reference
+# ---------------------------------------------------------------------------
+def _sweep_case(seed: int):
+    """A random decision point: topology, background lanes, candidates,
+    forced launches, and rates."""
+    rng = np.random.default_rng(seed)
+    racks = int(rng.integers(1, 5))
+    oversub = float(rng.choice([1.0, 2.0, 4.0]))
+    topo = network.Topology.multi_rack(
+        racks, CAP, core_capacity=racks * CAP / oversub, hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    rates = {}
+
+    def req(tag, i):
+        r = MigrationRequest(
+            f"{tag}{i}", 0.0, float(rng.uniform(0.2e9, 2e9)),
+            src=f"r{int(rng.integers(racks))}h0",
+            dst=f"r{int(rng.integers(racks))}h1")
+        rates[r.job_id] = PiecewiseRate(
+            [60.0, 120.0], [float(rng.uniform(0, 160e6)),
+                            float(rng.uniform(0, 20e6))],
+            offset=float(rng.uniform(0, 120)))
+        return r
+
+    for i in range(int(rng.integers(0, 4))):
+        r = req("bg", i)
+        plane.launch(r, rates[r.job_id], 0.0)
+    plane.advance(float(rng.uniform(0, 5)))
+    cands = [req("c", i) for i in range(int(rng.integers(1, 9)))]
+    forced = [req("f", i) for i in range(int(rng.integers(0, 3)))]
+    ctl = AdaptiveConcurrencyController(
+        plane, rate_of=lambda q: rates[q.job_id])
+    return ctl, cands, forced, plane.now
+
+
+def _assert_sweep_parity(seed: int):
+    ctl, cands, forced, now = _sweep_case(seed)
+    cp = [ctl.path_of(r) for r in cands]
+    fp = [ctl.path_of(r) for r in forced]
+    for idxs, busy, f_idx in ctl._components(cp, fp):
+        g = [cands[i] for i in idxs]
+        gp = [cp[i] for i in idxs]
+        gf = [forced[i] for i in f_idx]
+        gfp = [fp[i] for i in f_idx]
+        k_s, score_s = ctl._sweep_stacked(g, gp, gf, gfp, now)
+        k_r, score_r = ctl._sweep_reference(g, gp, gf, gfp, now)
+        assert k_s == k_r, (seed, k_s, k_r)
+        assert score_s == score_r, (seed, score_s, score_r)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_stacked_sweep_matches_reference_seeded(seed):
+    for trial in range(20):
+        _assert_sweep_parity(seed * 1000 + trial)
+
+
+def test_select_identical_across_sweep_engines():
+    """End-to-end select(): same launches in the same order."""
+    for seed in range(25):
+        ctl, cands, forced, now = _sweep_case(seed + 7_000)
+        sel = {}
+        for mode in ("stacked", "reference"):
+            ctl.sweep = mode
+            sel[mode] = [r.job_id
+                         for r in ctl.select(cands, now, forced=forced)]
+        assert sel["stacked"] == sel["reference"], seed
+
+
+# ---------------------------------------------------------------------------
+# the masked share solver and the sweep surface
+# ---------------------------------------------------------------------------
+LINKS = [f"L{i}" for i in range(5)]
+
+
+def _masked_case(rng):
+    caps = {l: float(rng.uniform(0.5, 50.0)) for l in LINKS}
+    n = int(rng.integers(1, 10))
+    paths = [tuple(rng.choice(LINKS, size=rng.integers(1, 4), replace=False))
+             for _ in range(n)]
+    if rng.random() < 0.2:
+        paths.append(())
+    active = rng.random((int(rng.integers(1, 6)), len(paths))) < 0.7
+    return paths, caps, active
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_masked_solver_rows_match_sparse_scenarios(seed):
+    """Each active row of ``fair_share_masked`` is the max-min allocation
+    of exactly that lane subset."""
+    rng = np.random.default_rng(seed)
+    for _ in range(25):
+        paths, caps, active = _masked_case(rng)
+        order = sorted({l for p in paths for l in p})
+        inc = np.zeros((len(order), len(paths)))
+        for i, p in enumerate(paths):
+            for l in p:
+                inc[order.index(l), i] = 1.0
+        rates = network.fair_share_masked(
+            inc, np.asarray([caps[l] for l in order]), active)
+        for k in range(active.shape[0]):
+            sub = [i for i in range(len(paths)) if active[k, i]]
+            ref = network.fair_share([paths[i] for i in sub], caps)
+            np.testing.assert_allclose(rates[k, sub], ref, rtol=1e-9)
+            assert not rates[k, [i for i in range(len(paths))
+                                 if not active[k, i]]].any()
+
+
+def test_what_if_prefix_shares_equals_per_k_calls():
+    """Row k of the sweep == what_if_shares(forced + cands[:k]), exactly
+    (the stacked solver's per-link arithmetic is local, so extra
+    scenarios and inactive columns change nothing)."""
+    for seed in range(20):
+        ctl, cands, forced, now = _sweep_case(seed + 11_000)
+        plane = ctl.plane
+        fp = [ctl.path_of(r) for r in forced]
+        cp = [ctl.path_of(r) for r in cands]
+        stacked = plane.what_if_shares_sweep(fp, cp)
+        assert stacked.shape == (len(cands) + 1, len(forced) + len(cands))
+        for k in range(len(cands) + 1):
+            ref = plane.what_if_shares(fp + cp[:k])
+            assert np.array_equal(stacked[k, :len(forced) + k], ref), \
+                (seed, k)
+            assert not stacked[k, len(forced) + k:].any()
+
+
+# ---------------------------------------------------------------------------
+# union-find domain maintenance vs the connected-components scan
+# ---------------------------------------------------------------------------
+class _RefDomains:
+    """PR 4's scan-based domain bookkeeping, tracked symbolically: each
+    domain is an ordered list of live (job_id, path) lanes; a launch
+    matches any domain whose LIVE link set intersects its path (the
+    coarser never-split semantics of the fabric: merged domains stay
+    merged until they drain)."""
+
+    def __init__(self):
+        self.domains = []                 # list of list[(job, path)]
+
+    @staticmethod
+    def _links(dom):
+        return {l for _, p in dom for l in p}
+
+    def launch(self, job, path):
+        pset = frozenset(path)
+        if pset:
+            hits = [d for d in self.domains if pset & self._links(d)]
+        else:
+            hits = [d for d in self.domains if not self._links(d)]
+        if not hits:
+            target = []
+            self.domains.append(target)
+        else:
+            target = hits[0]
+            for other in hits[1:]:
+                target.extend(other)
+                self.domains.remove(other)
+        target.append((job, tuple(path)))
+
+    def finish(self, job):
+        for d in self.domains:
+            for entry in d:
+                if entry[0] == job:
+                    d.remove(entry)
+                    if not d:
+                        self.domains.remove(d)
+                    return
+
+    def partition(self):
+        return sorted(sorted(j for j, _ in d) for d in self.domains)
+
+    def probe(self, path, caps, fallback):
+        pset = frozenset(path)
+        base = [p for d in self.domains if pset & self._links(d)
+                for _, p in d]
+        share = float(network.fair_share(base + [tuple(path)], caps)[-1])
+        return share if np.isfinite(share) else fallback
+
+
+def _run_uf_parity(seed: int):
+    rng = np.random.default_rng(seed)
+    racks = int(rng.integers(2, 5))
+    topo = network.Topology.multi_rack(
+        racks, CAP, core_capacity=racks * CAP / 2.0, hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    ref = _RefDomains()
+    tr = PiecewiseRate([60.0, 120.0], [40e6, 2e6])
+    now, n = 0.0, 0
+    for step in range(30):
+        op = rng.random()
+        if op < 0.6:                       # launch (sometimes unlinked)
+            if rng.random() < 0.1:
+                req = MigrationRequest(f"g{n}", 0.0,
+                                       float(rng.uniform(0.2e9, 1e9)))
+                req.src = req.dst = f"ghost{n}"   # unknown hosts: no links
+            else:
+                req = MigrationRequest(
+                    f"j{n}", 0.0, float(rng.uniform(0.2e9, 1.5e9)),
+                    src=f"r{int(rng.integers(racks))}h0",
+                    dst=f"r{int(rng.integers(racks))}h1")
+            n += 1
+            path = topo.path(req.src, req.dst)
+            plane.launch(req, tr, now, path=path)
+            ref.launch(req.job_id, path)
+        else:                              # advance: drain some lanes
+            now += float(rng.uniform(1.0, 40.0))
+            for req, _ in plane.advance(now):
+                ref.finish(req.job_id)
+        got = sorted(sorted(d.jobs_in_flight()) for d in plane._domains)
+        assert got == ref.partition(), (seed, step, got, ref.partition())
+        # probes agree exactly (same base-path order per domain)
+        for _ in range(3):
+            src = f"r{int(rng.integers(racks))}h0"
+            dst = f"r{int(rng.integers(racks))}h1"
+            assert plane.probe_bandwidth(src, dst) == ref.probe(
+                topo.path(src, dst), topo.capacities, plane._fallback_bw)
+    for req, _ in plane.advance(np.inf):
+        ref.finish(req.job_id)
+    assert plane.domain_count == 0 and ref.partition() == []
+    assert not plane._link_key and not plane._live     # all reaped
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_union_find_domains_match_components_rebuild_seeded(seed):
+    _run_uf_parity(seed)
+
+
+def test_drained_link_does_not_match_new_launches():
+    """A domain whose cross-rack lane completed keeps running its
+    intra-rack lanes; a NEW lane on the drained link must form its own
+    domain (live-link semantics), not join the old one."""
+    topo = network.Topology.multi_rack(2, CAP, core_capacity=2 * CAP,
+                                       hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    slow = PiecewiseRate([1.0], [80e6])
+    plane.launch(MigrationRequest("long", 0.0, 30e9,
+                                  src="r0h0", dst="r0h1"), slow, 0.0)
+    plane.launch(MigrationRequest("cross", 0.0, 1e9,
+                                  src="r0h0", dst="r1h0"), 0.0, 0.0)
+    assert plane.domain_count == 1         # coupled through acc:r0
+    # drain the cross lane only (rate 0 -> two rounds at fair share)
+    t = 0.0
+    while "cross" in plane.jobs_in_flight():
+        t += 1.0
+        plane.advance(t)
+    assert plane.jobs_in_flight() == ["long"]
+    # a NEW intra-r1 lane touches only the drained acc:r1/core links of
+    # the old domain: it must NOT join it
+    plane.launch(MigrationRequest("fresh", 0.0, 1e9,
+                                  src="r1h0", dst="r1h1"), slow, t)
+    assert plane.domain_count == 2
+    assert sorted(map(sorted, (d.jobs_in_flight()
+                               for d in plane._domains))) == \
+        [["fresh"], ["long"]]
+
+
+# ---------------------------------------------------------------------------
+# event-skipping FleetSim
+# ---------------------------------------------------------------------------
+def _mini_fleet(policy, skip, J=6, seed=11):
+    jobs = [SimJob(f"j{i}",
+                   WorkloadTrace([("IO", 60), ("CPU", 120), ("MEM", 60)],
+                                 total_s=7200, offset=13.0 * i), 1e9)
+            for i in range(J)]
+    return FleetSim(jobs, policy=policy, warmup_s=400.0, max_concurrent=4,
+                    seed=seed, event_skip=skip)
+
+
+@pytest.mark.parametrize("policy", ["immediate", "alma-paper"])
+def test_event_skip_bit_identical_to_per_second_loop(policy):
+    """Full-state parity: results, telemetry ring, rng stream, clock, and
+    (for surveillance policies) every fit's epoch."""
+    runs = {}
+    for skip in (False, True):
+        sim = _mini_fleet(policy, skip)
+        plan = [MigrationRequest(f"j{i}", sim.now + 30.0 + 200.0 * k, 1e9)
+                for k, i in enumerate((0, 2, 4))]
+        runs[skip] = (sim, sim.run_with_plan(plan, horizon_s=1200.0))
+    (s0, r0), (s1, r1) = runs[False], runs[True]
+    assert len(r1.per_job) == 3
+    assert r1.total_bytes == r0.total_bytes
+    assert r1.total_time == r0.total_time
+    assert r1.mean_downtime == r0.mean_downtime
+    assert r1.makespan == r0.makespan
+    assert r1.lm_hit_rate == r0.lm_hit_rate
+    assert r1.link_bytes == r0.link_bytes
+    assert s1.now == s0.now
+    assert np.array_equal(s1.telemetry._data, s0.telemetry._data)
+    assert np.array_equal(s1.telemetry._steps, s0.telemetry._steps)
+    assert np.array_equal(s1.telemetry._n, s0.telemetry._n)
+    assert s1.rng.bit_generator.state == s0.rng.bit_generator.state
+    for job_id, job in s0.lmcm.jobs.items():
+        other = s1.lmcm.jobs[job_id]
+        assert other.fitted_step == job.fitted_step, job_id
+        assert other.origin_step == job.origin_step, job_id
+
+
+def test_event_skip_cold_fleet_first_fit_parity():
+    """Regression: a COLD fleet (no warmup, no samples) under a
+    surveillance policy must fit its first cycle at the same step with
+    the same window in both modes — `next_refresh_step`'s no-samples
+    branch counts the about-to-be-recorded step as the first sample."""
+    runs = {}
+    for skip in (False, True):
+        sim2 = FleetSim([SimJob(f"j{i}",
+                                WorkloadTrace([("IO", 60), ("CPU", 120),
+                                               ("MEM", 60)],
+                                              total_s=7200,
+                                              offset=13.0 * i), 1e9)
+                         for i in range(6)],
+                        policy="alma-paper", warmup_s=0.0,
+                        max_concurrent=4, seed=11, event_skip=skip)
+        plan = [MigrationRequest("j0", 700.0, 1e9)]
+        runs[skip] = (sim2, sim2.run_with_plan(plan, horizon_s=1500.0))
+    (s0, r0), (s1, r1) = runs[False], runs[True]
+    assert r1.total_bytes == r0.total_bytes
+    assert np.array_equal(s1.telemetry._data, s0.telemetry._data)
+    assert s1.rng.bit_generator.state == s0.rng.bit_generator.state
+    for job_id, job in s0.lmcm.jobs.items():
+        assert s1.lmcm.jobs[job_id].fitted_step == job.fitted_step
+        assert s1.lmcm.jobs[job_id].origin_step == job.origin_step
+
+
+def test_run_idle_bulk_matches_per_step_loop():
+    """The run_idle fast path: identical ring, rng stream, and clock to
+    the per-second loop (forced via the fallback flag)."""
+    fast = _mini_fleet("immediate", True)
+    slow = _mini_fleet("immediate", True)
+    slow._bulk_ok = False                 # force the per-step loop
+    fast.run_idle(333.0)
+    slow.run_idle(333.0)
+    assert fast.now == slow.now
+    assert np.array_equal(fast.telemetry._data, slow.telemetry._data)
+    assert np.array_equal(fast.telemetry._steps, slow.telemetry._steps)
+    assert fast.rng.bit_generator.state == slow.rng.bit_generator.state
+
+
+def test_run_idle_wraps_ring_like_the_loop():
+    """Bulk appends past the ring capacity keep the surviving tail and
+    the full sample count."""
+    jobs = [SimJob("a", WorkloadTrace([("CPU", 30), ("IO", 30)], 3600),
+                   1e9)]
+    fast = FleetSim(jobs, policy="immediate", seed=5)
+    slow = FleetSim([SimJob("a", WorkloadTrace([("CPU", 30), ("IO", 30)],
+                                               3600), 1e9)],
+                    policy="immediate", seed=5)
+    slow._bulk_ok = False
+    cap = fast.telemetry.capacity
+    fast.run_idle(cap + 500.0)
+    slow.run_idle(cap + 500.0)
+    assert np.array_equal(fast.telemetry._data, slow.telemetry._data)
+    assert np.array_equal(fast.telemetry._steps, slow.telemetry._steps)
+    assert np.array_equal(fast.telemetry._n, slow.telemetry._n)
+
+
+def test_empty_fleet_constructs_and_runs():
+    """Regression: the bulk-recorder precomputation must not choke on a
+    fleet with no jobs (max() over zero traces)."""
+    sim = FleetSim([], policy="immediate", seed=0)
+    sim.run_idle(30.0)
+    res = sim.run_with_plan([], horizon_s=10.0)
+    assert res.total_bytes == 0.0 and res.per_job == {}
+
+
+def test_adaptive_controller_rides_event_skip():
+    """The adaptive-concurrency fleet with event skipping reproduces the
+    per-second loop exactly (controller decisions included)."""
+    results = {}
+    for skip in (False, True):
+        traces = table3_traces(phase_s=60.0)
+        jobs = [SimJob(j, tr, 1e9) for j, tr in traces.items()]
+        sim = FleetSim(jobs, policy="immediate", warmup_s=60.0,
+                       max_concurrent=8, seed=5,
+                       adaptive_concurrency=True, event_skip=skip)
+        plan = [MigrationRequest(j.job_id, sim.now + 5.0 + 120.0 * i,
+                                 j.v_bytes)
+                for i, j in enumerate(jobs)]
+        results[skip] = sim.run_with_plan(plan, horizon_s=3000.0)
+    assert results[True].total_bytes == results[False].total_bytes
+    assert results[True].total_time == results[False].total_time
+    assert results[True].link_bytes == results[False].link_bytes
+
+
+# ---------------------------------------------------------------------------
+# hypothesis search (skipped cleanly when the package is absent)
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_stacked_sweep_matches_reference_hypothesis(seed):
+    _assert_sweep_parity(seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_union_find_domains_match_components_rebuild_hypothesis(seed):
+    _run_uf_parity(seed)

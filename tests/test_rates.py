@@ -3,6 +3,7 @@ contracts the plane's vectorized event loop stands on: empty lane sets,
 single-entry tables, and lane membership churn (a callable-rate lane
 dropped mid-flight forces a bank rebuild with different padding)."""
 import numpy as np
+import pytest
 
 from repro.core import network, strunk
 from repro.core.orchestrator import MigrationRequest
@@ -164,3 +165,55 @@ def test_what_if_cost_batch_empty_and_parity():
     assert got.bytes_sent[1] == ref1.bytes_sent
     assert got.total_time[0] == ref0.total_time
     assert got.total_time[1] == ref1.total_time
+
+
+def test_rate_bank_concat_and_take_sample_parity():
+    """Composed banks (concat of mixed widths, row gathers with repeats)
+    sample bit-identically to freshly built banks over the same specs —
+    the contract the plane's incremental merges and the stacked defer-k
+    sweep rely on."""
+    a = PiecewiseRate([10.0, 25.0, 40.0], [1e6, 7e6, 3e6], offset=4.0)
+    b = PiecewiseRate([60.0], [5e6])
+    specs = [a, 2e6, None, b]
+    bank = RateBank(specs)
+    joined = RateBank.concat(RateBank(specs[:2]), RateBank(specs[2:]))
+    idx = np.asarray([3, 0, 0, 2, 1])
+    taken = bank.take(idx)
+    fresh = RateBank([specs[i] for i in idx])
+    t = np.linspace(0.0, 123.0, 7)
+    copy_all = np.ones(len(specs), bool)
+    for tt in t:
+        assert np.array_equal(bank.sample(tt, copy_all).copy(),
+                              joined.sample(tt, copy_all).copy())
+        assert np.array_equal(taken.sample(tt, np.ones(5, bool)).copy(),
+                              fresh.sample(tt, np.ones(5, bool)).copy())
+    assert taken.table_fn.nonneg and joined.table_fn.nonneg
+
+
+def test_rate_bank_take_remaps_fallback_rows():
+    """Gathering rows that hold un-tabulatable callables keeps the
+    fallback wiring on the gathered positions."""
+    fn = lambda t: 9e6
+    bank = RateBank([1e6, fn])
+    taken = bank.take(np.asarray([1, 0, 1]))
+    assert [i for i, _ in taken.fallback] == [0, 2]
+    got = taken.sample(5.0, np.ones(3, bool))
+    assert list(got) == [9e6, 1e6, 9e6]
+
+
+def test_what_if_cost_batch_accepts_rate_bank():
+    """Passing a prebuilt (tabular) RateBank prices identically to the
+    spec list; fallback-bearing banks are rejected loudly."""
+    table = PiecewiseRate([60.0, 120.0], [30e6, 1e6])
+    v = np.asarray([1e9, 2e9])
+    bw = np.asarray([125e6, 62.5e6])
+    start = np.asarray([0.0, 30.0])
+    via_specs = strunk.what_if_cost_batch(v, bw, [table, 4e6], start,
+                                          full=True)
+    via_bank = strunk.what_if_cost_batch(v, bw, RateBank([table, 4e6]),
+                                         start, full=True)
+    assert np.array_equal(via_specs.bytes_sent, via_bank.bytes_sent)
+    assert np.array_equal(via_specs.total_time, via_bank.total_time)
+    with pytest.raises(ValueError):
+        strunk.what_if_cost_batch(v, bw, RateBank([table, lambda t: 1e6]),
+                                  start)
