@@ -22,7 +22,11 @@ detailed rows to experiments/bench/<name>.json.
     must select bit-identically to the per-k reference and be >= 5x
     faster at 64 candidates, and the event-skipping FleetSim must be
     bit-identical to the per-second loop and >= 10x faster end-to-end on
-    a sparse 1-hour plan (immediate policy).
+    a sparse 1-hour plan (immediate policy);
+  * the fault-injection scenario smoke: an empty FaultPlan must be
+    bit-identical to no plan at all, node_failure's RTO finite and
+    bounded, host_drain's deadline met, and per-link bytes conserved
+    across abort -> retry (BENCH_scenarios.json).
 
 Both emit their JSON at the repo root for the cross-PR perf trajectory,
 schema-checked first (``check_bench_schema``) so a silently renamed key
@@ -49,6 +53,7 @@ ALL = [
     "fabric_sweep",
     "controller_sweep",
     "controlplane_scaling",
+    "scenarios_suite",
     "roofline",
 ]
 
@@ -61,13 +66,18 @@ BENCH_SCHEMAS = {
         "rows": list, "speedup_at_1000": (int, float),
         "tick_full_s_at_1000": (int, float),
         "tick_steady_s_at_1000": (int, float),
-        "saturation_jobs": (int, float), "criteria": dict,
+        "saturation_jobs": (int, float), "fit": dict, "criteria": dict,
     },
     "BENCH_table6.json": {
         "batch_vs_scalar_at_64": dict, "sweep_timing": list,
         "contended_8x_shared_link": dict, "plane_event_loop": dict,
         "fabric_sweep": list, "controller_sweep": list,
         "controlplane_scaling": dict, "criteria": dict,
+    },
+    "BENCH_scenarios.json": {
+        "host_drain": dict, "node_failure": dict, "boot_storm": dict,
+        "rolling_upgrade": dict, "empty_plan_parity": dict,
+        "conservation": dict, "criteria": dict,
     },
 }
 
@@ -93,14 +103,23 @@ def quick() -> None:
     fit = rows[-1]
     at_max = next(r for r in rows if r["n_jobs"] == max(
         r["n_jobs"] for r in rows if isinstance(r["n_jobs"], int)))
+    # the fit-quality gate: the reported saturation must come from a fit
+    # that explains the data (r^2 gate) or the measured-regime fallback —
+    # never from a noise-fitted slope hitting the 1e9 clamp
+    sat_trustworthy = (fit["saturation_jobs"] < int(1e9)
+                       and (fit["fit_ok"]
+                            or fit["fit_method"] == "measured_regime"))
     payload = {
         "rows": rows,
         "speedup_at_1000": at_max["speedup"],
         "tick_full_s_at_1000": at_max["tick_full_s"],
         "tick_steady_s_at_1000": at_max["tick_steady_s"],
         "saturation_jobs": fit["saturation_jobs"],
+        "fit": {"fit_ok": fit["fit_ok"], "fit_method": fit["fit_method"],
+                "linear_r2": fit["linear_r2"]},
         "criteria": {"speedup_10x": at_max["speedup"] >= 10.0,
-                     "saturation_10k": fit["saturation_jobs"] >= 10_000},
+                     "saturation_10k": fit["saturation_jobs"] >= 10_000,
+                     "saturation_fit_trustworthy": sat_trustworthy},
     }
     check_bench_schema("BENCH_fig10.json", payload)
     (ROOT / "BENCH_fig10.json").write_text(
@@ -112,8 +131,11 @@ def quick() -> None:
         f"batched tick only {at_max['speedup']}x faster than per-job loop"
     assert fit["saturation_jobs"] >= 10_000, \
         f"extrapolated saturation {fit['saturation_jobs']} < 10k jobs"
+    assert sat_trustworthy, \
+        f"saturation not from a trustworthy fit: {payload['fit']}"
     print(f"QUICK OK: speedup {at_max['speedup']}x, "
-          f"saturation ~{fit['saturation_jobs']} jobs")
+          f"saturation ~{fit['saturation_jobs']} jobs "
+          f"({fit['fit_method']}, r2={fit['linear_r2']})")
 
 
 def quick_migration_plane() -> None:
@@ -264,10 +286,68 @@ def quick_migration_plane() -> None:
           f"event-skip {skip_x}x")
 
 
+def quick_scenarios() -> None:
+    """Fault-injection scenario smoke: empty-FaultPlan parity must be
+    bit-identical, node_failure RTO finite and bounded, host_drain's
+    deadline met, and per-link byte conservation must hold across
+    abort -> retry (BENCH_scenarios.json)."""
+    import numpy as np
+
+    from benchmarks import scenarios_suite as ss
+    from repro.scenarios.suite import SCENARIOS
+
+    parity = ss.empty_plan_parity(seed=0)
+    cons = ss.conservation_check("immediate", seed=0)
+    # the cheap policy exercises the failure machinery; host_drain also
+    # runs under alma-paper, whose deadline-bounded postponement is the
+    # contract being gated
+    drain = SCENARIOS["host_drain"](policy="alma-paper", seed=0)
+    nf = SCENARIOS["node_failure"](policy="immediate", seed=0)
+    storm = SCENARIOS["boot_storm"](policy="immediate", seed=0)
+    roll = SCENARIOS["rolling_upgrade"](policy="immediate", seed=0)
+    rto_ok = (np.isfinite(nf["rto_s"]) and 0.0 < nf["rto_s"]
+              <= ss.RTO_BOUND_S and not nf["failed_jobs"])
+    payload = {
+        "host_drain": drain,
+        "node_failure": nf,
+        "boot_storm": storm,
+        "rolling_upgrade": roll,
+        "empty_plan_parity": parity,
+        "conservation": cons,
+        "criteria": {
+            "empty_plan_parity": parity["identical"],
+            "node_failure_rto_bounded": rto_ok,
+            "host_drain_deadline_met": drain["deadline_met"],
+            "byte_conservation": cons["conserved"],
+            "boot_storm_all_completed":
+                storm["completed"] == storm["requested"],
+            "rolling_upgrade_all_drained": roll["all_drained"],
+        },
+    }
+    check_bench_schema("BENCH_scenarios.json", payload)
+    (ROOT / "BENCH_scenarios.json").write_text(
+        json.dumps(payload, indent=1, default=str))
+    print(f"scenarios_smoke,0,parity={parity['identical']} "
+          f"rto={nf['rto_s']}s drain_sla={drain['sla_violations']} "
+          f"conserved={cons['conserved']}")
+    assert parity["identical"], \
+        f"empty FaultPlan broke bit-identity: {parity['checks']}"
+    assert rto_ok, f"node_failure RTO unbounded: {nf['rto_s']}"
+    assert drain["deadline_met"], \
+        f"host_drain missed its deadline: {drain}"
+    assert cons["conserved"], \
+        f"abort/retry byte conservation violated: {cons}"
+    print(f"QUICK OK: parity bit-identical, RTO {nf['rto_s']:.1f}s "
+          f"(<= {ss.RTO_BOUND_S:.0f}s), drain deadline met, "
+          f"{cons['links_checked']} links conserve bytes across "
+          f"{cons['n_aborts']} aborts")
+
+
 def main() -> None:
     if "--quick" in sys.argv[1:]:
         quick()
-        return quick_migration_plane()
+        quick_migration_plane()
+        return quick_scenarios()
     names = sys.argv[1:] or ALL
     OUT.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")

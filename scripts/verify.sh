@@ -1,11 +1,14 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the full pytest suite plus the benchmark smoke
-# (which refreshes and schema-checks BENCH_fig10.json / BENCH_table6.json,
-# asserts the adaptive concurrency controller never moves more bytes
-# than the static share-floor gate on the contended grid, and runs the
-# controlplane_scaling smoke: stacked defer-k sweep bit-equal to the
-# per-k reference and >= 5x at 64 candidates, event-skipping FleetSim
-# bit-identical to the per-second loop and >= 10x on a sparse plan).
+# (which refreshes and schema-checks BENCH_fig10.json / BENCH_table6.json
+# / BENCH_scenarios.json, asserts the adaptive concurrency controller
+# never moves more bytes than the static share-floor gate on the
+# contended grid, runs the controlplane_scaling smoke — stacked defer-k
+# sweep bit-equal to the per-k reference and >= 5x at 64 candidates,
+# event-skipping FleetSim bit-identical to the per-second loop and
+# >= 10x on a sparse plan — and the fault-injection scenario smoke:
+# empty-FaultPlan parity bit-identical, node_failure RTO bounded,
+# host_drain deadline met, per-link bytes conserved across abort/retry).
 #
 #   --fast   tier-1 pytest only (skip the benchmark smoke)
 set -euo pipefail

@@ -233,6 +233,43 @@ class ShardedPlane:
                     del self._link_key[l]
         return done
 
+    # -- fault injection -----------------------------------------------------
+    def set_link_capacity(self, link: str, capacity: float) -> None:
+        """Push a capacity change (fault injection) through the topology,
+        the fabric's own probe view, and every live domain — future
+        domains snapshot the mutated topology at creation."""
+        self.topology.set_capacity(link, capacity)
+        self.caps[link] = float(capacity)
+        self._fallback_bw = max(self.caps.values(), default=np.inf)
+        for d in self._domains:
+            d.set_link_capacity(link, capacity)
+
+    def abort(self, job_id: str
+              ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Settle ``job_id``'s in-flight lane early across the fabric
+        (see ``MigrationPlane.abort``): the lane's links release their
+        union-find incarnations exactly as a completion would, and a
+        domain fully drained by the abort dissolves immediately."""
+        return self._abort_where(lambda d: d.abort(job_id))
+
+    def fail_host(self, host: str
+                  ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Abort every in-flight lane with ``host`` as an endpoint."""
+        return self._abort_where(lambda d: d.fail_host(host))
+
+    def _abort_where(self, abort_fn
+                     ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        aborted: List[Tuple[object, strunk.MigrationOutcome]] = []
+        for d in list(self._domains):
+            out = abort_fn(d)
+            if not out:
+                continue
+            aborted.extend(self._on_finished(out))
+            if not d.in_flight:
+                self._dissolve(d)
+                self._domains.remove(d)
+        return aborted
+
     def launch(self, req, rate: RateSpec, now: float, *,
                path: Optional[Sequence[str]] = None) -> None:
         """Start executing ``req`` at ``now`` in the domain its path
@@ -300,17 +337,24 @@ class ShardedPlane:
             if d.in_flight:
                 live.append(d)
             else:
-                for l, b in d.link_bytes.items():
-                    self._retired_link_bytes[l] = \
-                        self._retired_link_bytes.get(l, 0.0) + b
-                self._dissolved_shares.update(d.last_shares)
-                root = self._domain_root.pop(id(d), None)
-                if root is not None:
-                    self._root_domain.pop(root, None)
-                    self._uf.pop_component(root)
-                if d is self._unlinked:
-                    self._unlinked = None
+                self._dissolve(d)
         self._domains = live
         if np.isfinite(until):
             self.now = max(self.now, until)
         return finished
+
+    def _dissolve(self, d: MigrationPlane) -> None:
+        """Retire a drained domain (drain or mass abort): fold its byte
+        accounting into the fabric counters, surface its final shares,
+        and delete its union-find component wholesale — ghost link
+        incarnations are reaped with it."""
+        for l, b in d.link_bytes.items():
+            self._retired_link_bytes[l] = \
+                self._retired_link_bytes.get(l, 0.0) + b
+        self._dissolved_shares.update(d.last_shares)
+        root = self._domain_root.pop(id(d), None)
+        if root is not None:
+            self._root_domain.pop(root, None)
+            self._uf.pop_component(root)
+        if d is self._unlinked:
+            self._unlinked = None

@@ -163,6 +163,16 @@ class SimResult:
     lm_hit_rate: float                 # fraction fired inside a true LM phase
     makespan: float = 0.0              # first launch -> last completion
     link_bytes: Dict[str, float] = field(default_factory=dict)
+    # --- fault-injection accounting (all zero/empty without a FaultPlan) ---
+    aborted_bytes: float = 0.0         # partial bytes wasted by aborted lanes
+    n_aborts: int = 0
+    n_retries: int = 0                 # aborted requests re-admitted
+    failed_jobs: List[str] = field(default_factory=list)   # retries exhausted
+    completed_at: Dict[str, float] = field(default_factory=dict)
+    # (job_id, t_abort, partial_bytes, path at abort) per aborted lane —
+    # the conservation tests bill these bytes against the abort-time path
+    abort_log: List[Tuple[str, float, float, Tuple[str, ...]]] = \
+        field(default_factory=list)
 
 
 class FleetSim:
@@ -192,13 +202,33 @@ class FleetSim:
                  min_share_frac: float = 0.0,
                  core_oversubscription: float = 1.0,
                  adaptive_concurrency: bool = False,
-                 event_skip: bool = True):
+                 event_skip: bool = True,
+                 fault_plan=None, evacuate_on_fail: bool = True,
+                 retry_backoff_s: float = 4.0, retry_max: int = 3):
         self.jobs = {j.job_id: j for j in jobs}
         self.rng = np.random.default_rng(seed)
         self.lmcm = LMCM(policy=policy, max_wait=max_wait,
                          max_concurrent=max_concurrent, bandwidth=bandwidth,
                          sample_period=sample_period,
-                         min_share_frac=min_share_frac)
+                         min_share_frac=min_share_frac,
+                         retry_backoff_s=retry_backoff_s,
+                         retry_max=retry_max)
+        # fault injection (scenarios/faults.py): events fire at the first
+        # sampling boundary >= their t, as event boundaries the skip
+        # paths never jump over. An EMPTY plan normalizes to None — by
+        # construction identical to no plan at all, which is the
+        # empty-FaultPlan parity contract every existing benchmark and
+        # bit-identity check relies on.
+        self._fault_plan = fault_plan if fault_plan else None
+        self._fault_idx = 0
+        self._down_hosts: set = set()
+        self._evacuate_on_fail = evacuate_on_fail
+        # (job_id, t, partial_bytes, path) per aborted lane, cumulative;
+        # run_with_plan slices its window out for SimResult
+        self._abort_log: List[Tuple[str, float, float, Tuple[str, ...]]] = []
+        self._failed_jobs: List[str] = []
+        self._retry_count = 0
+        self._restart_count = 0
         self.bandwidth = bandwidth
         if topology is None:
             if placement is not None:
@@ -225,6 +255,10 @@ class FleetSim:
         # NOT the nominal access speed)
         self.lmcm.path_capacity = lambda req: \
             self.plane.path_capacity(req.src, req.dst)
+        # endpoint revalidation around dead hosts — a pure no-op (True)
+        # while nothing is down, so wiring it unconditionally preserves
+        # the no-fault paths bit-for-bit
+        self.lmcm.retarget = self._retarget_request
         if adaptive_concurrency:
             # replace the static share-floor gate with the adaptive
             # concurrency controller: defer-k sweeps per migration domain
@@ -370,12 +404,155 @@ class FleetSim:
             return
         if self._event_skip and self._bulk_ok:
             nows = self._step_times(steps)
-            self._record_bulk(nows[:-1])
+            if self._fault_plan is None:
+                self._record_bulk(nows[:-1])
+                self.now = float(nows[-1])
+                return
+            # fault events are boundaries the bulk append may not cross:
+            # record in segments, firing the due faults at each segment
+            # head — chunked rng draws equal one big draw, so ring
+            # contents, stream, and clock stay bit-identical to the
+            # per-second loop below
+            cand = nows[:-1]
+            lo = 0
+            while lo < steps:
+                self._apply_faults(float(cand[lo]))
+                t_f = self._next_fault_time()
+                hi = steps if not np.isfinite(t_f) else \
+                    max(lo + 1, int(np.searchsorted(cand, t_f,
+                                                    side="left")))
+                self._record_bulk(cand[lo:hi])
+                lo = hi
             self.now = float(nows[-1])
             return
         for _ in range(steps):
+            if self._fault_plan is not None:
+                self._apply_faults(self.now)
             self._record_all()
             self.now += self.dt
+
+    # -- fault injection -----------------------------------------------------
+    def _next_fault_time(self) -> float:
+        """Sim time of the next unapplied fault event (inf when the plan
+        is exhausted or absent) — a hard skip/bulk boundary."""
+        if self._fault_plan is None or \
+                self._fault_idx >= len(self._fault_plan.events):
+            return float("inf")
+        return self._fault_plan.events[self._fault_idx].t
+
+    def _apply_faults(self, now: float, launch_info=None) -> None:
+        """Fire every fault event due at or before ``now`` (events are
+        quantized to the first sampling boundary >= their t). A host
+        failure aborts the in-flight lanes touching the host, re-admits
+        them through the LMCM's backoff path, and (with
+        ``evacuate_on_fail``) cold-restarts the VMs resident on the dead
+        host; link events push the new capacity through the fabric."""
+        while self._next_fault_time() <= now:
+            ev = self._fault_plan.events[self._fault_idx]
+            self._fault_idx += 1
+            if ev.kind == "host_fail":
+                self._down_hosts.add(ev.target)
+                for req, outcome in self.plane.fail_host(ev.target):
+                    self._handle_abort(req, outcome, now, launch_info)
+                if self._evacuate_on_fail:
+                    self._submit_restarts(ev.target, now)
+            elif ev.kind == "host_recover":
+                self._down_hosts.discard(ev.target)
+            else:                        # link_degrade / link_restore
+                self.plane.set_link_capacity(ev.target, ev.capacity)
+
+    def _handle_abort(self, req: MigrationRequest,
+                      outcome: strunk.MigrationOutcome, now: float,
+                      launch_info=None) -> None:
+        """Bookkeeping for one aborted lane: log the wasted partial bytes
+        against the abort-time path (retries may re-route), drop the
+        stale launch record, and hand the request to ``LMCM.fail`` for
+        backoff re-admission or permanent failure."""
+        self._abort_log.append((req.job_id, now, outcome.bytes_sent,
+                                tuple(req.path)))
+        if launch_info is not None:
+            launch_info.pop(id(req), None)
+        if self.lmcm.fail(req, outcome, now):
+            self._retry_count += 1
+        else:
+            self._failed_jobs.append(req.job_id)
+
+    def _live_hosts(self) -> List[str]:
+        return [h for h in self.placement.hosts
+                if h not in self._down_hosts]
+
+    def _submit_restarts(self, host: str, now: float) -> None:
+        """Cold-restart the VMs resident on a dead host: their memory
+        state is lost, so recovery re-sources each image from a live
+        host and flows through the normal LMCM pipeline as an urgent
+        request (no policy postponement — there is no workload left to
+        time against; concurrency control still applies). VMs already
+        covered by a live request (in flight and just re-admitted, or
+        queued) are skipped — the retry path owns them."""
+        if self.placement is None or host not in self.placement.hosts:
+            return
+        in_play = {r.job_id for r in self.lmcm.running
+                   if r.decision == "running"}
+        in_play |= {entry[2].job_id for entry in self.lmcm.queue
+                    if entry[2].decision == "scheduled"}
+        for job_id in sorted(self.placement.hosts[host].jobs):
+            if job_id in in_play or job_id not in self.jobs:
+                continue
+            req = self._restart_request(job_id, now)
+            if req is None:
+                self._failed_jobs.append(job_id)
+                continue
+            req.urgent = True
+            self._restart_count += 1
+            self.lmcm.submit(req, now)
+
+    def _restart_request(self, job_id: str, now: float
+                         ) -> Optional[MigrationRequest]:
+        """An urgent recovery request for a VM lost with its host: dst is
+        the least-loaded live host, src a live image source (the cold
+        restart streams the image, not the dead RAM). None when no live
+        host remains."""
+        live = self._live_hosts()
+        if not live:
+            return None
+        dst = min(live, key=lambda h: (self.placement.hosts[h].load, h))
+        src = next((h for h in live if h != dst), dst)
+        req = MigrationRequest(job_id, created_at=now,
+                               v_bytes=self.jobs[job_id].v_bytes,
+                               src=src, dst=dst)
+        req.path = self.topology.path(src, dst)
+        return req
+
+    def _retarget_request(self, req: MigrationRequest) -> bool:
+        """LMCM ``retarget`` hook: keep a request's endpoints off dead
+        hosts. A pure no-op (True) while nothing is down — the wiring
+        itself changes no fault-free behavior. A dead destination is
+        replaced by the least-loaded live host; a dead source means the
+        VM's transferable state is gone, so recovery re-sources from a
+        live host (cold restart from the image store). Returns False
+        when no live host can serve the request."""
+        if not self._down_hosts:
+            return True
+        if self.placement is None:
+            return req.src not in self._down_hosts \
+                and req.dst not in self._down_hosts
+        changed = False
+        if req.dst in self._down_hosts:
+            live = [h for h in self._live_hosts() if h != req.src]
+            if not live:
+                return False
+            req.dst = min(live,
+                          key=lambda h: (self.placement.hosts[h].load, h))
+            changed = True
+        if req.src in self._down_hosts:
+            live = [h for h in self._live_hosts() if h != req.dst]
+            if not live:
+                return False
+            req.src = live[0]
+            changed = True
+        if changed:
+            req.path = self.topology.path(req.src, req.dst)
+        return True
 
     def _tag_request(self, req: MigrationRequest) -> None:
         """Resolve src (via the placement's O(1) job->host index) and the
@@ -398,6 +575,11 @@ class FleetSim:
         """
         nxt_arr = pending[0].created_at if pending else np.inf
         nxt_due = self.lmcm.next_due_time()
+        # fault events are first-class boundaries the skip may NEVER
+        # jump over: a crash must abort lanes / submit restarts at its
+        # own quantized boundary, not at the next arrival (inf when no
+        # plan — the mask below degenerates to all-True)
+        nxt_fault = self._next_fault_time()
         now_step = int(self.now / self.dt)
         if not self.lmcm.uses_surveillance:
             # no-surveillance policies never tick the engine (no fits to
@@ -414,7 +596,7 @@ class FleetSim:
             nxt_refresh = self._refresh_boundary
         # candidate iteration count (slack-padded estimate; the exact
         # prefix is re-checked on the generated clocks below)
-        bound = min(t_end, nxt_arr, nxt_due,
+        bound = min(t_end, nxt_arr, nxt_due, nxt_fault,
                     self.now + (nxt_refresh - now_step) * self.dt)
         cap = int(max(0.0, (bound - self.now) / self.dt)) + 1
         if cap <= 1:
@@ -422,6 +604,7 @@ class FleetSim:
         nows = self._step_times(cap)
         cand = nows[:-1]                       # per-iteration clocks
         safe = ((cand < t_end) & (cand < nxt_arr) & (cand < nxt_due)
+                & (cand < nxt_fault)
                 & ((cand / self.dt).astype(np.int64) < nxt_refresh))
         stop = int(np.argmin(safe)) if not safe.all() else cap
         if stop <= 0:
@@ -434,22 +617,41 @@ class FleetSim:
         pending = sorted(plan, key=lambda r: r.created_at)
         per_job: Dict[str, strunk.MigrationOutcome] = {}
         done: List[MigrationRequest] = []
+        completed_at: Dict[str, float] = {}
         lm_hits = 0
         # lm-hit (launched in a non-MEM phase) and launch time, recorded at
         # release but only counted for migrations that actually complete
         launch_info: Dict[int, Tuple[bool, float]] = {}
         first_launch, last_finish = np.inf, 0.0
+        # window markers into the cumulative fault accounting
+        n_abort0, n_fail0 = len(self._abort_log), len(self._failed_jobs)
+        n_retry0 = self._retry_count
+        faults_live = self._fault_plan is not None
         t_end = self.now + horizon_s
         while self.now < t_end and (pending or self.lmcm.queue
                                     or self.lmcm.running
-                                    or self.plane.in_flight):
+                                    or self.plane.in_flight
+                                    or (faults_live and
+                                        self._next_fault_time() < t_end)):
+            if faults_live:
+                # fault boundary first: aborts/restarts/capacity changes
+                # take effect before this iteration's releases and
+                # execution (the skip path stops exactly here)
+                self._apply_faults(self.now, launch_info)
             if (self._event_skip and self._bulk_ok
                     and self.plane.in_flight == 0
                     and not self.plane._pending
-                    and (pending or self.lmcm.queue)):
+                    and (pending or self.lmcm.queue
+                         or (faults_live and
+                             np.isfinite(self._next_fault_time())))):
                 self._skip_idle_steps(pending, t_end)
                 if self.now >= t_end:
                     break
+                if faults_live:
+                    # the skip stops exactly ON a fault boundary: fire it
+                    # before this iteration's telemetry/releases, matching
+                    # the per-second loop's apply-then-record order
+                    self._apply_faults(self.now, launch_info)
             while pending and pending[0].created_at <= self.now:
                 req = pending.pop(0)
                 self._tag_request(req)
@@ -479,6 +681,7 @@ class FleetSim:
                 self.lmcm.finish(req, outcome)
                 per_job[req.job_id] = outcome
                 done.append(req)
+                completed_at[req.job_id] = self.now
                 hit, launched_at = launch_info.pop(id(req))
                 lm_hits += hit
                 last_finish = max(last_finish,
@@ -488,6 +691,7 @@ class FleetSim:
         total_bytes = sum(o.bytes_sent for o in per_job.values())
         times = [o.total_time for o in per_job.values()]
         downs = [o.downtime for o in per_job.values()]
+        abort_log = list(self._abort_log[n_abort0:])
         return SimResult(
             migrations=done,
             total_bytes=total_bytes,
@@ -498,6 +702,12 @@ class FleetSim:
             lm_hit_rate=lm_hits / max(1, len(done)),
             makespan=(last_finish - first_launch) if done else 0.0,
             link_bytes=dict(self.plane.link_bytes),
+            aborted_bytes=float(sum(b for _, _, b, _ in abort_log)),
+            n_aborts=len(abort_log),
+            n_retries=self._retry_count - n_retry0,
+            failed_jobs=list(self._failed_jobs[n_fail0:]),
+            completed_at=completed_at,
+            abort_log=abort_log,
         )
 
 

@@ -89,6 +89,17 @@ class Topology:
     def capacities(self) -> Dict[str, float]:
         return {i: l.capacity for i, l in self.links.items()}
 
+    def set_capacity(self, link_id: str, capacity: float) -> None:
+        """Mutate one link's capacity in place (fault injection: a
+        degraded or failed link keeps its identity — paths and domain
+        membership are unchanged — but fair shares recompute against the
+        new value; 0.0 freezes the link's flows at share 0). Live planes
+        snapshot ``capacities`` at construction, so callers push the
+        change through ``MigrationPlane.set_link_capacity`` /
+        ``ShardedPlane.set_link_capacity``, which route here."""
+        old = self.links[link_id]          # KeyError on unknown links
+        self.links[link_id] = Link(old.link_id, float(capacity))
+
     def access_of(self, host: str) -> Tuple[str, ...]:
         """The host's access links — its migration-domain signature."""
         return tuple(l for l in self.host_links.get(host, self.default_path)

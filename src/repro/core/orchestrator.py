@@ -80,9 +80,18 @@ class MigrationRequest:
     # --- filled by the simulator/plane ---
     path: Tuple[str, ...] = ()          # network links the transfer traverses
     # --- filled by LMCM ---
-    decision: str = "pending"           # pending|scheduled|running|done|cancelled
+    # pending|scheduled|running|done|cancelled|failed ("failed" is the
+    # terminal state of an aborted request whose retries are exhausted)
+    decision: str = "pending"
     scheduled_at: float = 0.0
     outcome: Optional[strunk.MigrationOutcome] = None
+    # --- failure/retry state (fault-injecting scenarios) ---
+    retries: int = 0                    # re-admissions after aborts so far
+    attempt_bytes: float = 0.0          # bytes wasted by aborted attempts
+    # urgent requests (failure recovery: the workload is gone, there is
+    # no cycle left to time against) bypass policy postponement at submit
+    # and at the release boundary — concurrency control still applies
+    urgent: bool = False
     # generation of this request's LIVE heap entry: cancel+resubmit leaves
     # the old entry in the heap, and decision alone cannot tell the stale
     # entry from the live one (both say "scheduled") — ``due`` only honors
@@ -95,7 +104,8 @@ class LMCM:
                  max_concurrent: int = 2, bandwidth: float = 50e9,
                  sample_period: float = 1.0,
                  surveillance: Optional[SurveillanceEngine] = None,
-                 min_share_frac: float = 0.0):
+                 min_share_frac: float = 0.0,
+                 retry_backoff_s: float = 4.0, retry_max: int = 3):
         assert policy in ("immediate", "alma-paper", "alma-plus")
         self.policy = policy
         self.max_wait = max_wait
@@ -132,6 +142,18 @@ class LMCM:
         # adaptive concurrency controller (core/controller.py): when set,
         # it replaces the static share-floor gate at the release boundary
         self.controller = None
+        # re-admission of aborted in-flight requests (``fail``):
+        # exponential backoff base and the retry cap before a request is
+        # failed permanently
+        self.retry_backoff_s = retry_backoff_s
+        self.retry_max = retry_max
+        # endpoint revalidation hook, wired by the simulator: called on a
+        # request before re-admission and again at the release boundary;
+        # it may rewrite src/dst/path (e.g. route around dead hosts) and
+        # returns False when no valid endpoints exist — the request is
+        # then failed/cancelled instead of launched at a dead host
+        self.retarget: Optional[
+            Callable[[MigrationRequest], bool]] = None
 
     @property
     def uses_surveillance(self) -> bool:
@@ -277,13 +299,49 @@ class LMCM:
         heapq.heappush(self.queue, (when, self._seq, req))
 
     def submit(self, req: MigrationRequest, now: float) -> None:
-        wait = self.decide(req, now)
+        # urgent (recovery) requests skip the policy decision: the
+        # workload they restart is gone, so there is no LM moment to wait
+        # for — only the release boundary's concurrency control applies
+        wait = 0.0 if req.urgent else self.decide(req, now)
         if wait < 0:
             req.decision = "cancelled"
             self.log.append(req)
             return
         req.decision = "scheduled"
         self._push(req, now + wait)
+
+    def fail(self, req: MigrationRequest,
+             outcome: strunk.MigrationOutcome, now: float) -> bool:
+        """Re-admission boundary for a request whose in-flight lane was
+        aborted: bill the wasted attempt, then either re-enter the heap
+        with exponential backoff (endpoints revalidated through
+        ``retarget``, so a retry never aims at a dead host) or fail the
+        request permanently. Returns True iff a retry was scheduled.
+
+        Deadline/max-wait semantics survive re-admission: ``created_at``
+        is never touched, so a retry already past the provider's
+        max-wait wall force-launches through ``_admit``; a retry that
+        cannot meet the customer deadline even at the backed-off start
+        is failed now rather than launched doomed."""
+        req.attempt_bytes += outcome.bytes_sent
+        req.outcome = outcome
+        if req.retries >= self.retry_max or \
+                (self.retarget is not None and not self.retarget(req)):
+            req.decision = "failed"
+            self.log.append(req)
+            return False
+        req.retries += 1
+        wait = self.retry_backoff_s * (2.0 ** (req.retries - 1))
+        if req.deadline is not None:
+            t_mig = strunk.strunk_bounds(req.v_bytes,
+                                         self.effective_bandwidth(req))[0]
+            if now + wait + t_mig >= req.deadline:
+                req.decision = "failed"
+                self.log.append(req)
+                return False
+        req.decision = "scheduled"
+        self._push(req, now + wait)
+        return True
 
     def cancel(self, req: MigrationRequest) -> None:
         """Withdraw a request (e.g. the consolidation plan was revised).
@@ -314,8 +372,17 @@ class LMCM:
             _, gen, req = heapq.heappop(self.queue)
             if req.decision != "scheduled" or gen != req.heap_gen:
                 continue            # cancelled or superseded: stale entry
-            # re-check suitability at fire time (cycle may have drifted)
-            if self.policy != "immediate":
+            # endpoint revalidation at the release boundary: a host that
+            # died while the request sat in the heap is routed around
+            # BEFORE the controller prices candidate paths (dead hosts
+            # never reach the defer-k sweep); no valid endpoints -> cancel
+            if self.retarget is not None and not self.retarget(req):
+                req.decision = "cancelled"
+                self.log.append(req)
+                continue
+            # re-check suitability at fire time (cycle may have drifted);
+            # urgent recovery requests have no workload left to re-time
+            if self.policy != "immediate" and not req.urgent:
                 wait = self.decide(req, now)
                 if wait < 0:
                     req.decision = "cancelled"

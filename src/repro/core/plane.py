@@ -209,6 +209,72 @@ class MigrationPlane:
         one domain (interface parity with ``fabric.ShardedPlane``)."""
         return [self.link_set] if self._meta else []
 
+    # -- fault injection -----------------------------------------------------
+    def set_link_capacity(self, link: str, capacity: float) -> None:
+        """Apply a capacity change (degradation, failure at 0.0, or
+        restoration) to this plane's view of ``link``. The link keeps its
+        identity — paths, incidence, and domain membership are unchanged —
+        and the next event chunk's fair-share solve sees the new value
+        (a 0-capacity link freezes its flows at share 0; every solver
+        stays finite, the lanes simply stall until restored)."""
+        capacity = float(capacity)
+        self.caps[link] = capacity
+        self._fallback_bw = max(self.caps.values(), default=np.inf)
+        row = self._link_row.get(link)
+        if row is not None and row < len(self._caps_vec):
+            self._caps_vec[row] = capacity
+            self._shares_stale = True    # banks stay valid; re-solve only
+
+    def abort(self, job_id: str
+              ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Settle ``job_id``'s in-flight lane early. Returns ``[]`` when
+        the job is not in flight, else one ``(request, outcome)`` pair
+        whose ``stop_reason`` is ``strunk.STOP_ABORTED``. ``bytes_sent``
+        counts exactly the bytes already charged to the lane's links —
+        completed transfers plus the partial current one — so per-link
+        byte conservation holds across abort -> retry."""
+        return self._abort_rows(
+            [i for i, m in enumerate(self._meta)
+             if m.req.job_id == job_id])
+
+    def fail_host(self, host: str
+                  ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Abort every in-flight lane with ``host`` as an endpoint (a
+        dead source kills the copy at its origin; a dead destination
+        loses the state already received)."""
+        return self._abort_rows(
+            [i for i, m in enumerate(self._meta)
+             if m.req.src == host or m.req.dst == host])
+
+    def _abort_rows(self, rows: List[int]
+                    ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Drop the lanes at ``rows`` through the same keep-index path a
+        completion uses (banks rebuild lazily; the link-set cache and
+        drained union-find incarnations are the fabric's to release)."""
+        if not rows:
+            return []
+        aborted: List[Tuple[object, strunk.MigrationOutcome]] = []
+        for i in rows:
+            m = self._meta[i]
+            # bytes already charged to the links: completed transfers
+            # (_sent) plus the progressed part of the current one
+            partial = float(self._sent[i] + (self._round[i] - self._rem[i]))
+            aborted.append((m.req, strunk.MigrationOutcome(
+                total_time=self.now - m.t_start,
+                downtime=float(self._down[i]),
+                bytes_sent=max(0.0, partial),
+                rounds=int(self._rounds[i]),
+                stop_reason=strunk.STOP_ABORTED)))
+        dead = set(rows)
+        keep = [i for i in range(len(self._meta)) if i not in dead]
+        self._meta = [self._meta[i] for i in keep]
+        for name in ("_v", "_rem", "_round", "_acc", "_sent",
+                     "_rounds", "_down", "_phase", "_reason"):
+            setattr(self, name, getattr(self, name)[keep])
+        self._banks_stale = True
+        self._link_set_cache = None
+        return aborted
+
     # -- lifecycle -----------------------------------------------------------
     def launch(self, req, rate: RateSpec, now: float, *,
                path: Optional[Sequence[str]] = None) -> None:
@@ -358,6 +424,14 @@ class MigrationPlane:
         finished: List[Tuple[object, strunk.MigrationOutcome]] = \
             self._backlog
         self._backlog = []
+        if not self._meta:
+            # a mass abort can empty the plane between advances: the
+            # clean no-op is a clock fast-forward plus backlog handoff —
+            # no bank rebuild or fair-share solve over zero lanes
+            if self.now < until and np.isfinite(until):
+                self.now = until
+            self._fold_link_vec()
+            return finished
         while self._meta and self.now < until:
             if self.vectorized:
                 if self._banks_stale:

@@ -49,6 +49,11 @@ XEN_STOP_TOTAL_FACTOR = 3.0
 # stop-reason lane codes (batch) <-> names (scalar outcomes)
 REASON_DIRTY_LOW, REASON_MAX_ROUNDS, REASON_TOTAL_CAP = 0, 1, 2
 STOP_REASONS = ("dirty_low", "max_rounds", "total_cap")
+# a lane settled early by fault injection (MigrationPlane.abort /
+# fail_host) — deliberately NOT in STOP_REASONS: the pre-copy recurrence
+# never produces it, only the abort path does, so completion and abort
+# outcomes stay distinguishable by stop_reason alone
+STOP_ABORTED = "aborted"
 
 
 def strunk_bounds(v_mem: float, bandwidth: float,

@@ -1,0 +1,346 @@
+"""Fault-injection scenario layer: abort/retry conservation, FaultPlan
+semantics, event-skip bit-identity under faults, and the guards around
+an emptied plane.
+
+The load-bearing contracts:
+
+* partial bytes of an aborted lane are billed exactly once — per-link
+  byte counters equal (abort partials @ abort-time path) + (completed
+  bytes @ final path), even when retries re-route;
+* a non-empty FaultPlan run is bit-identical between ``event_skip=True``
+  and ``False`` (faults are first-class event boundaries);
+* an EMPTY FaultPlan is indistinguishable from no plan at all;
+* mass abort leaves a consistent, advanceable (no-op) plane and keeps
+  every solver finite at zero capacity.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import network, strunk
+from repro.core.fabric import ShardedPlane
+from repro.core.orchestrator import LMCM, MigrationRequest
+from repro.core.rates import PiecewiseRate
+from repro.scenarios.faults import FaultEvent, FaultPlan
+from repro.scenarios.fleet import build_fleet, evacuation_plan, \
+    percentiles, sla_violations
+from repro.scenarios.suite import SCENARIOS
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+def test_fault_plan_sorted_stable_and_falsy():
+    assert not FaultPlan()
+    assert len(FaultPlan()) == 0
+    p = FaultPlan([FaultEvent(5.0, "host_fail", "b"),
+                   FaultEvent(1.0, "host_fail", "a"),
+                   FaultEvent(5.0, "host_recover", "a")])
+    assert [e.t for e in p] == [1.0, 5.0, 5.0]
+    # stable: same-instant events keep authored order
+    assert [e.target for e in p if e.t == 5.0] == ["b", "a"]
+    assert p
+
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultEvent(0.0, "meteor_strike", "h0")
+
+
+def test_fault_plan_builders_and_shift():
+    p = FaultPlan.host_failure(10.0, "h0", recover_at=60.0)
+    assert [(e.t, e.kind) for e in p] == [(10.0, "host_fail"),
+                                          (60.0, "host_recover")]
+    b = FaultPlan.link_brownout(5.0, "core", 1e6, restore_at=9.0,
+                                restore_capacity=1e9)
+    assert [(e.kind, e.capacity) for e in b] == [("link_degrade", 1e6),
+                                                 ("link_restore", 1e9)]
+    with pytest.raises(ValueError):
+        FaultPlan.link_brownout(5.0, "core", 1e6, restore_at=9.0)
+    s = p.shifted(100.0)
+    assert [e.t for e in s] == [110.0, 160.0]
+    r1 = FaultPlan.random(["a", "b"], {"l": 1e9}, horizon_s=100.0, seed=3)
+    r2 = FaultPlan.random(["a", "b"], {"l": 1e9}, horizon_s=100.0, seed=3)
+    assert [(e.t, e.kind, e.target) for e in r1] \
+        == [(e.t, e.kind, e.target) for e in r2]
+
+
+# ---------------------------------------------------------------------------
+# plane abort: partial-bytes accounting + emptied-plane guards
+# ---------------------------------------------------------------------------
+def _flat_rate(v: float) -> PiecewiseRate:
+    return PiecewiseRate(np.array([1e12]), np.array([v]))
+
+
+def _launch(plane, job_id, src, dst, v_bytes=1e9, t=0.0, rate=1e6):
+    req = MigrationRequest(job_id, created_at=t, v_bytes=v_bytes,
+                           src=src, dst=dst)
+    req.path = plane.topology.path(src, dst)
+    plane.launch(req, _flat_rate(rate), t, path=req.path)
+    return req
+
+
+def test_abort_partial_bytes_match_link_charges():
+    topo = network.Topology.star(["a", "b", "c"], 100e6,
+                                 core_capacity=300e6)
+    plane = ShardedPlane(topo)
+    _launch(plane, "j0", "a", "b")
+    _launch(plane, "j1", "c", "b")
+    plane.advance(5.0)
+    assert plane.in_flight == 2
+    before = dict(plane.link_bytes)
+    aborted = plane.fail_host("a")
+    assert [r.job_id for r, _ in aborted] == ["j0"]
+    _, out = aborted[0]
+    assert out.stop_reason == strunk.STOP_ABORTED
+    assert out.stop_reason not in strunk.STOP_REASONS
+    assert out.bytes_sent > 0.0
+    # settled partial bytes == exactly what j0's private access link was
+    # charged chunk-by-chunk before the crash; the abort itself settles,
+    # it never re-bills a link
+    assert out.bytes_sent == pytest.approx(plane.link_bytes["acc:a"])
+    assert plane.link_bytes == before
+    # the survivor keeps running and completes
+    assert plane.in_flight == 1
+    done = []
+    t = 5.0
+    while plane.in_flight and t < 500.0:
+        t += 1.0
+        done += plane.advance(t)
+    assert [r.job_id for r, _ in done] == ["j1"]
+
+
+def test_mass_abort_leaves_clean_noop_plane():
+    topo = network.Topology.star(["a", "b", "c"], 100e6)
+    plane = ShardedPlane(topo)
+    _launch(plane, "j0", "a", "b")
+    _launch(plane, "j1", "b", "c")
+    plane.advance(2.0)
+    out = plane.fail_host("b")          # endpoint of BOTH lanes
+    assert len(out) == 2
+    assert plane.in_flight == 0
+    assert plane.domain_count == 0
+    assert plane.advance(100.0) == []   # emptied plane: clean no-op
+    # probes still answer after the wipeout
+    assert plane.probe_bandwidth("a", "c", 0) > 0
+
+
+def test_zero_capacity_stays_finite_and_recovers():
+    topo = network.Topology.star(["a", "b"], 100e6)
+    plane = ShardedPlane(topo)
+    _launch(plane, "j0", "a", "b", v_bytes=5e8, rate=0.0)
+    plane.advance(1.0)
+    plane.set_link_capacity("acc:a", 0.0)
+    done = plane.advance(10.0)          # stalled, not NaN/crashed
+    assert done == []
+    assert plane.in_flight == 1
+    plane.set_link_capacity("acc:a", 100e6)
+    t, done = 10.0, []
+    while plane.in_flight and t < 200.0:
+        t += 1.0
+        done += plane.advance(t)
+    assert [r.job_id for r, _ in done] == ["j0"]
+
+
+def test_what_if_cost_batch_empty_bank():
+    from repro.core.rates import RateBank
+    bank = RateBank([])
+    assert bank.m == 0
+    b = strunk.what_if_cost_batch(np.zeros(0), np.zeros(0), bank,
+                                  np.zeros(0))
+    assert b.shape == (0,)
+    out = strunk.what_if_cost_batch(np.zeros(0), np.zeros(0), bank,
+                                    np.zeros(0), full=True)
+    assert out.bytes_sent.shape == (0,)
+    # empty spec list takes the same guard
+    assert strunk.what_if_cost_batch(np.zeros(0), np.zeros(0), [],
+                                     np.zeros(0)).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# LMCM retry/backoff
+# ---------------------------------------------------------------------------
+def _aborted_outcome(bytes_sent=1e8):
+    return strunk.MigrationOutcome(
+        total_time=5.0, downtime=0.0, bytes_sent=bytes_sent, rounds=1,
+        stop_reason=strunk.STOP_ABORTED)
+
+
+def test_lmcm_fail_backoff_doubles_and_caps():
+    lm = LMCM(policy="immediate", retry_backoff_s=4.0, retry_max=3)
+    req = MigrationRequest("j", created_at=0.0, v_bytes=1e9)
+    waits = []
+    now = 0.0
+    for k in range(3):
+        assert lm.fail(req, _aborted_outcome(), now)
+        assert req.decision == "scheduled"
+        waits.append(req.scheduled_at - now)
+        now = req.scheduled_at
+    assert waits == [4.0, 8.0, 16.0]
+    assert req.attempt_bytes == pytest.approx(3e8)
+    # 4th abort exhausts the cap -> terminal failure
+    assert not lm.fail(req, _aborted_outcome(), now)
+    assert req.decision == "failed"
+    assert req.created_at == 0.0        # never touched by retries
+
+
+def test_lmcm_fail_respects_deadline():
+    lm = LMCM(policy="immediate", retry_backoff_s=1e4, retry_max=3)
+    req = MigrationRequest("j", created_at=0.0, v_bytes=1e9, deadline=60.0)
+    assert not lm.fail(req, _aborted_outcome(), 10.0)
+    assert req.decision == "failed"
+
+
+def test_lmcm_retarget_cancels_unroutable():
+    lm = LMCM(policy="immediate")
+    lm.retarget = lambda req: False
+    req = MigrationRequest("j", created_at=0.0, v_bytes=1e9,
+                           src="a", dst="b")
+    lm.submit(req, 0.0)
+    assert lm.due(0.0) == []
+    assert req.decision == "cancelled"
+
+
+# ---------------------------------------------------------------------------
+# FleetSim: conservation, parity, bit-identity under faults
+# ---------------------------------------------------------------------------
+def _faulted_run(policy, seed, *, event_skip=True, cross_core=True):
+    fleet = build_fleet(seed=seed)
+    victim = fleet.hosts[0]
+    t_fail = 20.0
+    sim = fleet.sim(policy, warmup_s=0.0, event_skip=event_skip,
+                    fault_plan=FaultPlan.host_failure(
+                        t_fail, victim, recover_at=t_fail + 300.0))
+    excl = fleet.rack_peers(victim) if cross_core else ()
+    plan = evacuation_plan(fleet, victim, sim.now, exclude=excl)
+    for req in plan:
+        req.urgent = True
+    res = sim.run_with_plan(plan, horizon_s=2500.0)
+    return sim, res, plan
+
+
+def _check_link_conservation(res, rtol=1e-6):
+    expected = defaultdict(float)
+    for _, _, partial, path in res.abort_log:
+        for link in path:
+            expected[link] += partial
+    for req in res.migrations:
+        for link in req.path:
+            expected[link] += res.per_job[req.job_id].bytes_sent
+    links = set(expected) | {l for l, b in res.link_bytes.items() if b}
+    assert links
+    for link in links:
+        assert res.link_bytes.get(link, 0.0) == pytest.approx(
+            expected.get(link, 0.0), rel=rtol), link
+
+
+def test_abort_retry_byte_conservation_seeded():
+    sim, res, plan = _faulted_run("immediate", seed=0)
+    assert res.n_aborts > 0 and res.n_retries > 0
+    assert len(res.per_job) == len(plan) and not res.failed_jobs
+    assert res.aborted_bytes == pytest.approx(
+        sum(b for _, _, b, _ in res.abort_log))
+    _check_link_conservation(res)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_abort_retry_byte_conservation_property(seed):
+    _, res, _ = _faulted_run("immediate", seed=seed)
+    _check_link_conservation(res)
+
+
+def test_event_skip_bit_identity_under_faults():
+    for policy in ("immediate", "alma-paper"):
+        s1, r1, _ = _faulted_run(policy, seed=0, event_skip=True)
+        s0, r0, _ = _faulted_run(policy, seed=0, event_skip=False)
+        assert r1.n_aborts == r0.n_aborts > 0
+        assert r1.total_bytes == r0.total_bytes
+        assert r1.total_time == r0.total_time
+        assert r1.aborted_bytes == r0.aborted_bytes
+        assert r1.link_bytes == r0.link_bytes
+        assert r1.completed_at == r0.completed_at
+        assert r1.abort_log == r0.abort_log
+        assert s1.now == s0.now
+        assert np.array_equal(s1.telemetry._data, s0.telemetry._data)
+        assert np.array_equal(s1.telemetry._steps, s0.telemetry._steps)
+        assert s1.rng.bit_generator.state == s0.rng.bit_generator.state
+
+
+def test_empty_fault_plan_is_no_plan():
+    results = []
+    for fp in (None, FaultPlan()):
+        fleet = build_fleet(seed=1)
+        sim = fleet.sim("immediate", warmup_s=0.0, fault_plan=fp)
+        plan = evacuation_plan(fleet, fleet.hosts[0], sim.now)
+        res = sim.run_with_plan(plan, horizon_s=2000.0)
+        results.append((sim, res))
+    (s0, r0), (s1, r1) = results
+    assert s1._fault_plan is None       # empty normalizes to None
+    assert r1.n_aborts == 0 and r1.aborted_bytes == 0.0
+    assert r0.total_bytes == r1.total_bytes
+    assert r0.link_bytes == r1.link_bytes
+    assert r0.completed_at == r1.completed_at
+    assert np.array_equal(s0.telemetry._data, s1.telemetry._data)
+    assert s0.rng.bit_generator.state == s1.rng.bit_generator.state
+
+
+def test_retries_reroute_around_dead_source():
+    # the victim dies mid-drain: retried lanes must not keep the corpse
+    # as an endpoint, and every VM still completes somewhere live
+    sim, res, plan = _faulted_run("immediate", seed=0)
+    victim = "r0h0"
+    for req in res.migrations:
+        # a completed lane may only name the corpse as src if it finished
+        # before the crash
+        assert req.src != victim or res.completed_at[req.job_id] <= 20.0
+    for job_id in (r.job_id for r in plan):
+        host = sim.placement.host_of(job_id)
+        assert host is not None and host != victim
+
+
+# ---------------------------------------------------------------------------
+# scenario layer
+# ---------------------------------------------------------------------------
+def test_scenario_helpers():
+    assert np.isnan(percentiles([])["p50"])
+    p = percentiles([1.0, 2.0, 3.0, 4.0])
+    assert p["p50"] == 2.5 and p["max"] == 4.0
+    done = MigrationRequest("a", 0.0, 1e9, deadline=10.0)
+    late = MigrationRequest("b", 0.0, 1e9, deadline=10.0)
+    dead = MigrationRequest("c", 0.0, 1e9)
+    dead.decision = "failed"
+    assert sla_violations([done, late, dead],
+                          {"a": 5.0, "b": 50.0}) == 2
+
+
+def test_evacuation_plan_projected_load():
+    fleet = build_fleet(seed=0)
+    victim = fleet.hosts[0]
+    plan = evacuation_plan(fleet, victim, 0.0)
+    assert {r.job_id for r in plan} == set(fleet.jobs_on(victim))
+    assert all(r.src == victim and r.dst != victim for r in plan)
+    # projected-load tracking: no destination oversubscribed
+    incoming = defaultdict(float)
+    for r in plan:
+        incoming[r.dst] += fleet.placement.hosts[victim].jobs[r.job_id]
+    for h, extra in incoming.items():
+        assert fleet.placement.hosts[h].free >= extra
+    # rack-local preference: peers have headroom, so the drain stays
+    # inside the rack
+    assert all(fleet.rack_of[r.dst] == fleet.rack_of[victim] for r in plan)
+
+
+def test_scenarios_smoke_deterministic():
+    a = SCENARIOS["node_failure"](policy="immediate", seed=0)
+    b = SCENARIOS["node_failure"](policy="immediate", seed=0)
+    assert a == b
+    assert np.isfinite(a["rto_s"]) and a["rto_s"] > 0
+    assert a["n_aborts"] > 0 and not a["failed_jobs"]
+    d = SCENARIOS["host_drain"](policy="immediate", seed=0)
+    assert d["drained"] and d["deadline_met"]
