@@ -6,9 +6,17 @@ detailed rows to experiments/bench/<name>.json.
 
 ``python -m benchmarks.run --quick`` is the CI smoke entry:
 
-  * fig10 at fleet sizes {5, 100, 1000}, asserting the batched surveillance
-    tick beats the seed per-job loop >= 10x at 1,000 jobs and that
-    extrapolated saturation reaches >= 10,000 jobs (BENCH_fig10.json);
+  * fig10 at fleet sizes {5, 100, 1000, 10000, 25000}, asserting the
+    batched surveillance tick beats the seed per-job loop >= 10x at 1,000
+    jobs, that extrapolated saturation reaches >= 10,000 jobs, that the
+    MEASURED saturation knee of the full-refit tick (interpolated between
+    two measured bracketing sizes, never extrapolated) sits at >= 10,000
+    jobs, and that 1-vs-2-virtual-device shard cells (subprocesses, so
+    XLA_FLAGS lands before jax init) produce bit-identical decide digests
+    — with the 2-device cell additionally >= 1.5x faster when the host
+    actually has >= 2 CPU cores (on a single-core host that speedup is
+    physically unattainable, so the gate records the measured ratio and
+    ``multicore_host: false`` instead of lying) (BENCH_fig10.json);
   * the migration-plane smoke: the batched pre-copy simulator must be
     >= 5x faster than the per-request scalar loop at 64 concurrent
     migrations (bit-equal outcomes); the vectorized plane event loop must
@@ -66,7 +74,8 @@ BENCH_SCHEMAS = {
         "rows": list, "speedup_at_1000": (int, float),
         "tick_full_s_at_1000": (int, float),
         "tick_steady_s_at_1000": (int, float),
-        "saturation_jobs": (int, float), "fit": dict, "criteria": dict,
+        "saturation_jobs": (int, float), "fit": dict, "knee": dict,
+        "shard_scaling": dict, "criteria": dict,
     },
     "BENCH_table6.json": {
         "batch_vs_scalar_at_64": dict, "sweep_timing": list,
@@ -93,14 +102,20 @@ def check_bench_schema(name: str, payload: dict) -> None:
 
 
 def quick() -> None:
-    """fig10 smoke: batched tick vs per-job loop at {5, 100, 1000} jobs."""
+    """fig10 smoke: batched tick vs per-job loop at {5..25000} jobs, the
+    measured full-refit saturation knee, and 1-vs-2-device shard parity."""
+    import os
+
     from benchmarks import fig10_scalability
-    summary, rows = fig10_scalability.run(sizes=[5, 100, 1000], reps=3,
-                                          steady_steps=16)
+    summary, rows = fig10_scalability.run(
+        sizes=[5, 100, 1000, 10_000, 25_000], reps=3, steady_steps=16)
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "fig10_scalability.json").write_text(
         json.dumps(rows, indent=1, default=str))
     fit = rows[-1]
+    # speedup vs the per-job loop is measured at the largest size the
+    # baseline is affordable at (perjob_cap, 1000 jobs)
+    at_1000 = next(r for r in rows if r["n_jobs"] == 1000)
     at_max = next(r for r in rows if r["n_jobs"] == max(
         r["n_jobs"] for r in rows if isinstance(r["n_jobs"], int)))
     # the fit-quality gate: the reported saturation must come from a fit
@@ -109,17 +124,44 @@ def quick() -> None:
     sat_trustworthy = (fit["saturation_jobs"] < int(1e9)
                        and (fit["fit_ok"]
                             or fit["fit_method"] == "measured_regime"))
+    knee = {k: fit[k] for k in ("knee_jobs", "knee_measured", "knee_basis",
+                                "knee_bracket")}
+    measured_knee_ok = bool(knee["knee_measured"]
+                            and knee["knee_jobs"] >= 10_000)
+
+    # shard scaling: 1-vs-2 virtual devices on the 10k-job force-refit
+    # tick, in subprocesses (XLA_FLAGS must precede jax init; the parent
+    # keeps its single real device so co-resident timing gates hold)
+    cells = fig10_scalability.shard_scaling(n=10_000, shard_counts=(1, 2),
+                                            reps=2)
+    shard_parity = len({c["digest"] for c in cells}) == 1
+    speedup_2dev = (cells[0]["tick_full_s"]
+                    / max(cells[1]["tick_full_s"], 1e-9))
+    multicore = (os.cpu_count() or 1) >= 2
+    # on a single-core host a 2-device speedup is physically unattainable
+    # (shard_map adds partitioning copies with no parallelism to pay for
+    # them) — enforce bit-parity and RECORD the measured ratio instead of
+    # gating on a number the machine cannot produce
+    shard_speedup_ok = (speedup_2dev >= 1.5) if multicore else True
+
     payload = {
         "rows": rows,
-        "speedup_at_1000": at_max["speedup"],
-        "tick_full_s_at_1000": at_max["tick_full_s"],
-        "tick_steady_s_at_1000": at_max["tick_steady_s"],
+        "speedup_at_1000": at_1000["speedup"],
+        "tick_full_s_at_1000": at_1000["tick_full_s"],
+        "tick_steady_s_at_1000": at_1000["tick_steady_s"],
         "saturation_jobs": fit["saturation_jobs"],
         "fit": {"fit_ok": fit["fit_ok"], "fit_method": fit["fit_method"],
                 "linear_r2": fit["linear_r2"]},
-        "criteria": {"speedup_10x": at_max["speedup"] >= 10.0,
+        "knee": knee,
+        "shard_scaling": {"cells": cells,
+                          "speedup_2dev": round(speedup_2dev, 3),
+                          "multicore_host": multicore},
+        "criteria": {"speedup_10x": at_1000["speedup"] >= 10.0,
                      "saturation_10k": fit["saturation_jobs"] >= 10_000,
-                     "saturation_fit_trustworthy": sat_trustworthy},
+                     "saturation_fit_trustworthy": sat_trustworthy,
+                     "measured_knee_10k": measured_knee_ok,
+                     "shard_parity": shard_parity,
+                     "shard_speedup_2dev": shard_speedup_ok},
     }
     check_bench_schema("BENCH_fig10.json", payload)
     (ROOT / "BENCH_fig10.json").write_text(
@@ -127,15 +169,26 @@ def quick() -> None:
     print("name,us_per_call,derived")
     for s in summary:
         print(f"{s['name']},{s['us_per_call']},{s['derived']}")
-    assert at_max["speedup"] >= 10.0, \
-        f"batched tick only {at_max['speedup']}x faster than per-job loop"
+    assert at_1000["speedup"] >= 10.0, \
+        f"batched tick only {at_1000['speedup']}x faster than per-job loop"
     assert fit["saturation_jobs"] >= 10_000, \
         f"extrapolated saturation {fit['saturation_jobs']} < 10k jobs"
     assert sat_trustworthy, \
         f"saturation not from a trustworthy fit: {payload['fit']}"
-    print(f"QUICK OK: speedup {at_max['speedup']}x, "
+    assert measured_knee_ok, \
+        f"full-refit knee not measured at >= 10k jobs: {knee}"
+    assert shard_parity, \
+        f"sharded decide digests diverged: {cells}"
+    assert shard_speedup_ok, \
+        f"2-device shard cell only {speedup_2dev:.2f}x on a multicore host"
+    print(f"QUICK OK: speedup {at_1000['speedup']}x, "
           f"saturation ~{fit['saturation_jobs']} jobs "
-          f"({fit['fit_method']}, r2={fit['linear_r2']})")
+          f"({fit['fit_method']}, r2={fit['linear_r2']}), "
+          f"knee {knee['knee_jobs']} jobs measured in "
+          f"{knee['knee_bracket']} (tick @25k "
+          f"{at_max['tick_full_s']}s), shard parity ok, "
+          f"2dev {speedup_2dev:.2f}x "
+          f"({'multicore' if multicore else 'single-core'} host)")
 
 
 def quick_migration_plane() -> None:

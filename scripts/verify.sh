@@ -10,6 +10,12 @@
 # empty-FaultPlan parity bit-identical, node_failure RTO bounded,
 # host_drain deadline met, per-link bytes conserved across abort/retry).
 #
+# After tier-1, the sharded-decide-plane parity tests are re-run in a
+# SEPARATE pytest process with XLA_FLAGS forcing 2 virtual CPU devices
+# (the flag only takes effect before jax initializes; tier-1 deliberately
+# sees the real single device, so multi-device tests skip there and the
+# forced pass is what actually exercises shard_map bit-parity on CI).
+#
 #   --fast   tier-1 pytest only (skip the benchmark smoke)
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -24,6 +30,8 @@ for arg in "$@"; do
 done
 
 python -m pytest -x -q
+XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}" \
+    python -m pytest -x -q tests/test_shard.py
 if [ "$FAST" -eq 0 ]; then
     python -m benchmarks.run --quick
 fi

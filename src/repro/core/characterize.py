@@ -71,6 +71,21 @@ def _nb_predict(edges, ll, prior, x):
     return jnp.argmax(lp, axis=-1).astype(jnp.int32), post
 
 
+@jax.jit
+def _nb_predict_lm(edges, ll, prior, x):
+    """LM/NLM signal only: same argmax as ``_nb_predict`` (bit-identical
+    class decisions) but skips the softmax posterior — the decide-plane
+    tick only consumes the binary suitability series, and this is also the
+    shard_map body of the sharded classify (``core/shard.py``): no
+    cross-row reduction anywhere, so row-partitioning is exact."""
+    lead = x.shape[:-1]
+    lp = _nb_logprob(edges, ll, prior, x.reshape(-1, x.shape[-1]))
+    cls = jnp.argmax(lp, axis=-1)
+    lm = jnp.asarray(LM_SUITABLE, jnp.int8)[
+        jnp.clip(cls, 0, len(LM_SUITABLE) - 1)]
+    return lm.reshape(lead)
+
+
 def fit(features: np.ndarray, labels: np.ndarray, *, n_bins: int = 16,
         n_classes: int = len(CLASSES), alpha: float = 1.0) -> NaiveBayes:
     """features: (N, F) f32; labels: (N,) int in [0, n_classes)."""
@@ -120,6 +135,18 @@ def classify_series_batch(nb: NaiveBayes, windows: np.ndarray,
     posterior (J, T, C)).
     """
     return classify_series(nb, windows)     # predict flattens leading axes
+
+
+def classify_lm_batch(nb: NaiveBayes, windows: np.ndarray) -> np.ndarray:
+    """LM-only fleet classification: (J, T, F) -> (J, T) int8 {0=NLM,1=LM}.
+
+    Bit-identical to ``classify_series_batch``'s lm output (same jitted
+    argmax, same suitability table) but never materializes the (J, T, C)
+    posterior — the surveillance tick's classify stage.
+    """
+    return np.asarray(_nb_predict_lm(nb.bin_edges, nb.log_likelihood,
+                                     nb.log_prior,
+                                     jnp.asarray(windows, jnp.float32)))
 
 
 def primary_secondary(classes: np.ndarray) -> Tuple[int, Optional[int]]:

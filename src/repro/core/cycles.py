@@ -45,16 +45,23 @@ class CycleModel:
 
 
 def _resolve_kernel(use_kernel: Optional[bool]) -> bool:
-    # interpret-mode Pallas is for TPU-lowering validation, not CPU
-    # throughput: off-TPU the default is the pocketfft/numpy path.
-    return kops.on_tpu() if use_kernel is None else use_kernel
+    # interpret-mode Pallas is for lowering validation, not CPU throughput:
+    # off-accelerator (no TPU or GPU kernel row) the default is the
+    # pocketfft/numpy path.
+    return kops.has_accelerator() if use_kernel is None else use_kernel
 
 
-def _spectra(X: np.ndarray, use_kernel: Optional[bool]) -> np.ndarray:
-    """(J, n) f32 -> (J, n//2+1) one-sided power of the mean-removed rows."""
+def _spectra(X: np.ndarray, use_kernel: Optional[bool],
+             mesh=None) -> np.ndarray:
+    """(J, n) f32 -> (J, n//2+1) one-sided power of the mean-removed rows.
+
+    ``mesh`` row-shards the kernel path across devices (bit-identical: the
+    spectrum is per-row). The numpy fallback ignores it — pocketfft rows
+    are already independent and host-resident.
+    """
     n = X.shape[1]
     if _resolve_kernel(use_kernel) and kops.dft_supported(n):
-        return np.asarray(kops.power_spectrum(X, center=True))
+        return np.asarray(kops.power_spectrum(X, center=True, mesh=mesh))
     F = np.fft.rfft(X - X.mean(axis=1, keepdims=True), axis=1)
     return (F.real ** 2 + F.imag ** 2).astype(np.float32)
 
@@ -87,7 +94,7 @@ def _peak_pick(P: np.ndarray, n: int, min_period: int, max_period: int
 
 
 def _refine_period_batch(X: np.ndarray, p0: np.ndarray, min_period: int,
-                         max_period: int) -> np.ndarray:
+                         max_period: int, mesh=None) -> np.ndarray:
     """Sharpen FFT bin estimates with a local autocorrelation search, for
     the whole fleet at once.
 
@@ -109,18 +116,19 @@ def _refine_period_batch(X: np.ndarray, p0: np.ndarray, min_period: int,
     ok = hi >= lo
     if not ok.any():
         return p0.copy()
-    if kops.on_tpu() and n <= 2048:
-        # Pallas kernel: fleet x shared candidate-lag grid in one call
+    if kops.has_accelerator() and n <= 2048:
+        # Pallas kernel (TPU or GPU row of the dispatch table): fleet x
+        # shared candidate-lag grid in one call, optionally row-sharded
         import jax.numpy as jnp
         lags = np.arange(int(lo[ok].min()), int(hi[ok].max()) + 1)
         R = np.asarray(kops.autocorr_score(
             jnp.asarray(Xc, jnp.float32),
-            jnp.asarray(lags, jnp.int32))).astype(np.float64)
+            jnp.asarray(lags, jnp.int32), mesh=mesh)).astype(np.float64)
     else:
-        # off-TPU: Wiener-Khinchin on the zero-padded rows gives the exact
-        # linear autocorrelation R[j, p] = sum_t x[t] x[t+p] at EVERY lag
-        # in one vectorized pocketfft pass (interpret-mode Pallas is not a
-        # CPU hot path)
+        # off-accelerator: Wiener-Khinchin on the zero-padded rows gives the
+        # exact linear autocorrelation R[j, p] = sum_t x[t] x[t+p] at EVERY
+        # lag in one vectorized pocketfft pass (interpret-mode Pallas is not
+        # a CPU hot path)
         F = np.fft.rfft(Xc, 2 * n, axis=1)
         R = np.fft.irfft(F.real ** 2 + F.imag ** 2, 2 * n, axis=1)[:, :n]
         lags = np.arange(n)
@@ -185,11 +193,15 @@ def fold_profile(classes: np.ndarray, period: int) -> np.ndarray:
 def fit_cycle_batch(classes_batch: np.ndarray, *, min_period: int = 2,
                     max_period: Optional[int] = None,
                     folded: bool = False,
-                    use_kernel: Optional[bool] = None) -> List[CycleModel]:
+                    use_kernel: Optional[bool] = None,
+                    mesh=None) -> List[CycleModel]:
     """Fleet-scale cycle recognition: one batched (Pallas MXU-DFT) power
     spectrum, one batched peak pick, one batched autocorrelation refinement
     for all jobs. This is the surveillance-tick hot path (Fig. 10) — the
     seed's per-job Python dispatch dominated beyond ~100 jobs.
+
+    ``mesh`` row-shards the kernel-path stages across devices; every stage
+    is per-row, so sharded output is bit-identical to unsharded.
     """
     X = np.asarray(classes_batch, np.float32)
     J, n = X.shape
@@ -199,13 +211,14 @@ def fit_cycle_batch(classes_batch: np.ndarray, *, min_period: int = 2,
     if n < 2 * min_period:
         return [CycleModel(0, 0.0, np.asarray(
             [1 if X[j].mean() >= 0.5 else 0], np.int8)) for j in range(J)]
-    P = _spectra(X, use_kernel)
+    P = _spectra(X, use_kernel, mesh=mesh)
     k_star, conf, found = _peak_pick(P, n, min_period, max_p)
     p0 = np.round(n / np.maximum(k_star, 1)).astype(np.int64)
     periods = np.where(found, p0, 1)
     if found.any():
         refined = _refine_period_batch(X[found].astype(np.float64),
-                                       p0[found], min_period, max_p)
+                                       p0[found], min_period, max_p,
+                                       mesh=mesh)
         periods = periods.copy()
         periods[found] = refined
     out: List[CycleModel] = []

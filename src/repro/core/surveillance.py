@@ -35,15 +35,36 @@ and its per-step surveillance; ``FleetSim`` and
 Batch shapes are bucketed to powers of two before entering jitted code so
 a fleet whose stale subset fluctuates does not retrace XLA programs every
 tick.
+
+100k-job extensions (all default-off / bit-identical):
+
+  * sharding   — ``shards=k`` partitions every job-row stage (classify,
+                 spectrum, refinement, Alg. 2) across the first k local
+                 devices via shard_map (``core/shard.py``). No stage mixes
+                 rows, so sharded ticks are BIT-IDENTICAL to the
+                 single-device reference path (``shards=None``).
+  * overlap    — ``overlap=True`` returns ``TickResult`` while Algorithm 2
+                 is still executing under jax's async dispatch; the
+                 job->RemainTime dict materializes on first ``.remain``
+                 access, so the caller's next record/gather/classify
+                 overlaps the decide. ``overlap=False`` restores the
+                 synchronous schedule; values are bit-identical either way
+                 (the decide's operands are captured at dispatch).
+  * decide cache — the packed Alg. 2 operands (profiles/periods/origins/
+                 ids) are cached and invalidated only by register/
+                 unregister/refit, so a tick over an all-fresh fleet does
+                 ZERO per-job Python work beyond the staleness scan:
+                 ``m_now`` is one vectorized subtraction.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import characterize, cycles, postpone as pp
+from repro.core import shard as shardlib
 from repro.core.telemetry import TelemetryBuffer
 
 
@@ -67,11 +88,42 @@ class SurveilledJob:
     fitted_step: int = -1               # latest step at last fit (-1 = never)
 
 
-@dataclass
 class TickResult:
-    remain: Dict[str, int]              # job -> Alg.2 RemainTime (samples)
-    refitted: int                       # jobs whose cycle fit was recomputed
-    fleet: int                          # jobs with a current cycle model
+    """One surveillance tick's outcome: ``remain`` (job -> Alg.2 RemainTime
+    in samples), ``refitted`` (cycle fits recomputed), ``fleet`` (jobs with
+    a current model).
+
+    With ``overlap=True`` the engine constructs this while Algorithm 2 is
+    still executing on device (jax async dispatch); the ``remain`` dict is
+    built on first access from operands captured at dispatch time, so the
+    values are bit-identical to the synchronous schedule — only the host
+    sync moves.
+    """
+    __slots__ = ("_remain", "refitted", "fleet", "_thunk")
+
+    def __init__(self, remain: Optional[Dict[str, int]], refitted: int,
+                 fleet: int, _thunk: Optional[Callable] = None):
+        self._remain = remain
+        self.refitted = refitted
+        self.fleet = fleet
+        self._thunk = _thunk
+
+    @property
+    def remain(self) -> Dict[str, int]:
+        if self._thunk is not None:
+            self._remain = self._thunk()
+            self._thunk = None
+        return self._remain
+
+    @property
+    def pending(self) -> bool:
+        """True while the decide has not been synced to host yet."""
+        return self._thunk is not None
+
+    def __repr__(self) -> str:
+        body = "<pending>" if self.pending else repr(self._remain)
+        return (f"TickResult(remain={body}, refitted={self.refitted}, "
+                f"fleet={self.fleet})")
 
 
 class SurveillanceEngine:
@@ -79,12 +131,18 @@ class SurveillanceEngine:
 
     def __init__(self, *, folded: bool = False, min_samples: int = 8,
                  acyclic_refit: int = 8,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None,
+                 shards: Optional[int] = None,
+                 overlap: bool = False):
         self.folded = folded
         self.min_samples = min_samples
         self.acyclic_refit = acyclic_refit
         self.use_kernel = use_kernel
+        self.shards = shards
+        self.overlap = overlap
+        self.mesh = shardlib.decide_mesh(shards)
         self.jobs: Dict[str, SurveilledJob] = {}
+        self._decide_cache: Optional[Tuple] = None
 
     # -- registration -------------------------------------------------------
     def register(self, job_id: str, telemetry, nb: characterize.NaiveBayes,
@@ -92,10 +150,12 @@ class SurveillanceEngine:
         job = SurveilledJob(job_id, telemetry, nb, window=window,
                             dirty_rate_fn=dirty_rate_fn)
         self.jobs[job_id] = job
+        self._decide_cache = None
         return job
 
     def unregister(self, job_id: str) -> None:
-        self.jobs.pop(job_id, None)
+        if self.jobs.pop(job_id, None) is not None:
+            self._decide_cache = None
 
     # -- staleness epochs ---------------------------------------------------
     def _latest_steps(self, jobs: List[SurveilledJob]) -> np.ndarray:
@@ -203,7 +263,9 @@ class SurveillanceEngine:
             Wp = np.zeros((G_p, T_p, W.shape[2]))
             Wp[:G, T_p - tail:] = W
             W = Wp
-        _, lm_tail, _ = characterize.classify_series_batch(jobs[0].nb, W)
+        # lm-only classify: same jitted argmax as classify_series_batch
+        # (bit-identical lm), no (G, T, C) posterior — optionally sharded
+        lm_tail = shardlib.classify_lm(jobs[0].nb, W, self.mesh)
         lm_tail = lm_tail[:G, T_p - tail:]
         if tail == m:
             LM = lm_tail
@@ -215,12 +277,14 @@ class SurveillanceEngine:
                 if d:
                     LM[i, m - d:] = lm_tail[i, tail - d:]
         models = cycles.fit_cycle_batch(LM, folded=self.folded,
-                                        use_kernel=self.use_kernel)
+                                        use_kernel=self.use_kernel,
+                                        mesh=self.mesh)
         for job, model, lm_row, ls in zip(jobs, models, LM, latest):
             job.model = model
             job.lm_series = lm_row
             job.origin_step = int(ls) - m + 1
             job.fitted_step = int(ls)
+        self._decide_cache = None       # packed Alg.2 operands went stale
 
     def refresh_model(self, job_id: str, *, force: bool = False
                       ) -> Optional[cycles.CycleModel]:
@@ -230,25 +294,51 @@ class SurveillanceEngine:
         return self.jobs[job_id].model
 
     # -- the batched tick ---------------------------------------------------
+    def _packed_fleet(self) -> Tuple:
+        """(ids, origins, profiles, periods) for the fitted fleet, padded/
+        bucketed for Alg. 2 — cached between ticks and invalidated only by
+        register/unregister/refit, so an all-fresh tick does no per-job
+        Python work past the staleness scan."""
+        if self._decide_cache is None:
+            fitted = [j for j in self.jobs.values() if j.model is not None]
+            if not fitted:
+                self._decide_cache = ((), None, None, None)
+            else:
+                p_max = max((j.model.period for j in fitted
+                             if j.model.period > 1), default=1)
+                # bucket both axes: jit cache stays O(log J * log P)
+                J_p, P_p = _pow2(len(fitted)), _pow2(max(p_max, 1))
+                profiles, periods = pp.pack_fleet(
+                    [j.model for j in fitted], n_jobs=J_p, p_max=P_p)
+                origins = np.zeros(J_p, np.int64)
+                origins[: len(fitted)] = [j.origin_step for j in fitted]
+                self._decide_cache = (tuple(j.job_id for j in fitted),
+                                      origins, profiles, periods)
+        return self._decide_cache
+
     def tick(self, now_step: int) -> TickResult:
         """One fleet surveillance tick: refresh every stale cycle fit, then
-        answer Algorithm 2 for the whole fleet in one vectorized call."""
+        answer Algorithm 2 for the whole fleet in one vectorized call.
+
+        With ``overlap=True`` the returned ``TickResult`` is constructed
+        before the decide's host sync: Alg. 2 runs under jax async dispatch
+        while the caller records/gathers the next tick, and ``.remain``
+        materializes on first access (bit-identical values — the operands
+        are captured at dispatch). Padding rows (period 0) decide to 0 and
+        are sliced off before the dict is built.
+        """
         refitted = self.refresh()
-        fitted = [j for j in self.jobs.values() if j.model is not None]
-        if not fitted:
+        ids, origins, profiles, periods = self._packed_fleet()
+        if not ids:
             return TickResult({}, refitted, 0)
-        p_max = max((j.model.period for j in fitted if j.model.period > 1),
-                    default=1)
-        # bucket both axes: jit cache stays O(log J * log P)
-        J_p, P_p = _pow2(len(fitted)), _pow2(max(p_max, 1))
-        profiles, periods = pp.pack_fleet([j.model for j in fitted],
-                                          n_jobs=J_p, p_max=P_p)
-        m_now = np.zeros(J_p, np.int32)
-        for i, job in enumerate(fitted):
-            m_now[i] = now_step - job.origin_step
-        import jax.numpy as jnp
-        remain = np.asarray(pp.postpone_batch_jit(
-            profiles, periods, jnp.asarray(m_now)))[: len(fitted)]
-        return TickResult(
-            {job.job_id: int(r) for job, r in zip(fitted, remain)},
-            refitted, len(fitted))
+        m_now = (now_step - origins).astype(np.int32)   # one vector op
+        remain_dev = shardlib.postpone_rows(profiles, periods, m_now,
+                                            self.mesh)
+        J = len(ids)
+
+        def materialize(ids=ids, dev=remain_dev, J=J) -> Dict[str, int]:
+            return dict(zip(ids, np.asarray(dev)[:J].tolist()))
+
+        if self.overlap:
+            return TickResult(None, refitted, J, _thunk=materialize)
+        return TickResult(materialize(), refitted, J)

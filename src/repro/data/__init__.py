@@ -1,3 +1,4 @@
 from repro.data.synthetic import (  # noqa: F401
     make_batch, token_stream, SyntheticCorpus,
+    correlated_tenant_load, heavy_tail_load,
 )

@@ -29,6 +29,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend as kb
+
 B_TILE = 8
 L_TILE = 8
 MAX_N = 2048
@@ -49,13 +51,8 @@ def _kernel(x_ref, lags_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray, *,
-                   interpret: bool = True) -> jnp.ndarray:
-    """x: (J, N) f32 mean-removed rows; lags: (L,) int32 shared candidates.
-
-    Returns (J, L) f32 unnormalized autocorrelation scores. Lags outside
-    [0, N) are clamped (callers mask their scores out).
-    """
+def _autocorr_score(x: jnp.ndarray, lags: jnp.ndarray, *,
+                    interpret: bool) -> jnp.ndarray:
     J, N = x.shape
     L = lags.shape[0]
     bt = min(B_TILE, J)
@@ -78,6 +75,19 @@ def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray, *,
         interpret=interpret,
     )(x.astype(jnp.float32), lags.astype(jnp.int32))
     return out[:J, :L]
+
+
+def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray, *,
+                   interpret=None) -> jnp.ndarray:
+    """x: (J, N) f32 mean-removed rows; lags: (L,) int32 shared candidates.
+
+    Returns (J, L) f32 unnormalized autocorrelation scores. Lags outside
+    [0, N) are clamped (callers mask their scores out). ``interpret=None``
+    auto-detects: compiled on TPU, interpret mode (lowering validation)
+    everywhere else.
+    """
+    return _autocorr_score(x, lags,
+                           interpret=kb.resolve_interpret("tpu", interpret))
 
 
 def autocorr_score_ref(x: np.ndarray, lags: np.ndarray) -> np.ndarray:

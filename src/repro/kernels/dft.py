@@ -42,6 +42,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import backend as kb
+
 B_TILE = 8
 F_TILE = 128
 T_TILE = 128
@@ -122,13 +124,8 @@ def _kernel(x_ref, cos_ref, sin_ref, csum_ref, ssum_ref, out_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("center", "interpret"))
-def dft_power(x: jnp.ndarray, *, center: bool = False,
-              interpret: bool = True) -> jnp.ndarray:
-    """x: (B, N) f32, N % 128 == 0 -> (B, N) power spectrum (all N bins).
-
-    ``center=True`` removes each row's mean inside the kernel (fused
-    prologue/epilogue) — equivalent to ``dft_power(x - x.mean(-1, kd))``.
-    """
+def _dft_power(x: jnp.ndarray, *, center: bool,
+               interpret: bool) -> jnp.ndarray:
     B, N = x.shape
     cos_np, sin_np = dft_weights(N)
     cos_w, sin_w = jnp.asarray(cos_np), jnp.asarray(sin_np)
@@ -159,3 +156,17 @@ def dft_power(x: jnp.ndarray, *, center: bool = False,
         interpret=interpret,
     )(x, cos_w, sin_w, csum, ssum)
     return out[:B]
+
+
+def dft_power(x: jnp.ndarray, *, center: bool = False,
+              interpret=None) -> jnp.ndarray:
+    """x: (B, N) f32, N % 128 == 0 -> (B, N) power spectrum (all N bins).
+
+    ``center=True`` removes each row's mean inside the kernel (fused
+    prologue/epilogue) — equivalent to ``dft_power(x - x.mean(-1, kd))``.
+    ``interpret=None`` auto-detects: compiled on TPU, interpret mode
+    (lowering validation) everywhere else — callers no longer pay
+    interpret-mode dispatch by default on the platform the kernel targets.
+    """
+    return _dft_power(x, center=center,
+                      interpret=kb.resolve_interpret("tpu", interpret))

@@ -1,10 +1,30 @@
-"""Public jit'd wrappers for the Pallas kernels.
+"""Public wrappers for the accelerated ops — one backend-dispatch table.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels are *targeted* at TPU and validated in interpret mode — see the
-system-level note in DESIGN.md). Wrappers fall back to the jnp reference
-when a shape doesn't meet the kernel's tiling contract, so callers never
-have to care.
+Each cycle-recognition op has up to three lowerings, selected per process by
+``backend.kernel_backend()`` (overridable with ``backend.force_backend`` so
+tests can exercise a foreign row on any host):
+
+  ==================  =======================  ======================  =====================
+  op                  tpu                      gpu                     xla (fallback)
+  ==================  =======================  ======================  =====================
+  power_spectrum      dft.dft_power            gpu.dft_power           ref.dft_power_ref
+                      (Pallas MXU matmul-DFT,  (Pallas Triton,         (jnp complex FFT)
+                      fused mean removal)      dot per weight tile)
+  autocorr_score      autocorr.autocorr_score  gpu.autocorr_score      ref.autocorr_score_
+                      (VMEM rows, SMEM lags)   (plain-Pallas body)     ref_xla (vmap slices)
+  ==================  =======================  ======================  =====================
+
+Pallas rows auto-detect ``interpret``: compiled on their physical target
+platform, interpret mode elsewhere (validation). Shapes outside a kernel's
+tiling contract always fall back to the xla row, so callers never care.
+
+Both table ops accept an optional ``mesh``: rows are then partitioned across
+the mesh devices with ``shard_map`` (every lowering is embarrassingly
+parallel per row, so sharded results are bit-identical to unsharded) — the
+kernel half of the sharded surveillance plane (``core/shard.py``).
+
+The training-side kernels (flash attention, ssm scan, dirty blocks) keep
+their TPU-or-reference dispatch: they are not on the decide-plane hot path.
 """
 from __future__ import annotations
 
@@ -14,19 +34,37 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import autocorr as _ac
-from repro.kernels import dirty_delta as _dd
+from repro.kernels import backend as kb
 from repro.kernels import dft as _dft
+from repro.kernels import dirty_delta as _dd
 from repro.kernels import flash_attention as _fa
-from repro.kernels import ssm_scan as _ssm
+from repro.kernels import gpu as _gpu
 from repro.kernels import ref
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels import ssm_scan as _ssm
+from repro.kernels.backend import (  # noqa: F401  (re-exported API)
+    force_backend, has_accelerator, kernel_backend, on_gpu, on_tpu)
 
 
 def _interpret() -> bool:
-    return not on_tpu()
+    """Interpret flag for the TPU-only training kernels."""
+    return kb.resolve_interpret("tpu", None)
+
+
+def _row_sharded(fn, mesh, x: jnp.ndarray) -> jnp.ndarray:
+    """Run ``fn`` with the rows of ``x`` partitioned across ``mesh`` via
+    shard_map (1-D mesh, axis name taken from the mesh). Rows are padded to
+    a multiple of the device count and sliced back; since every lowering is
+    per-row, the result is bit-identical to ``fn(x)``."""
+    from jax.sharding import PartitionSpec as P
+    n = int(mesh.devices.size)
+    axis = mesh.axis_names[0]
+    B = x.shape[0]
+    B_p = -(-B // n) * n
+    if B_p != B:
+        x = jnp.pad(x, ((0, B_p - B),) + ((0, 0),) * (x.ndim - 1))
+    out = kb.shard_map_compat(fn, mesh, in_specs=(P(axis),),
+                              out_specs=P(axis))(x)
+    return out[:B]
 
 
 # ---------------------------------------------------------------------------
@@ -48,41 +86,83 @@ def dirty_blocks(new: jnp.ndarray, old: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # DFT power spectrum (cycle recognition)
 # ---------------------------------------------------------------------------
+def _power_tpu(x: jnp.ndarray, *, center: bool) -> jnp.ndarray:
+    return _dft.dft_power(x.astype(jnp.float32), center=center)
+
+
+def _power_gpu(x: jnp.ndarray, *, center: bool) -> jnp.ndarray:
+    return _gpu.dft_power(x.astype(jnp.float32), center=center)
+
+
+def _power_xla(x: jnp.ndarray, *, center: bool) -> jnp.ndarray:
+    if center:
+        x = x - jnp.mean(x, axis=-1, keepdims=True)
+    return ref.dft_power_ref(x)
+
+
+POWER_SPECTRUM = {"tpu": _power_tpu, "gpu": _power_gpu, "xla": _power_xla}
+
+
 def dft_supported(n: int) -> bool:
     return n % _dft.T_TILE == 0 and 0 < n <= _dft.MAX_N
 
 
-def power_spectrum(x: jnp.ndarray, *, center: bool = False) -> jnp.ndarray:
+def power_spectrum(x: jnp.ndarray, *, center: bool = False,
+                   mesh=None) -> jnp.ndarray:
     """x: (B, N) -> (B, N//2+1) one-sided power spectrum.
 
-    ``center=True`` fuses per-row mean removal into the kernel prologue
-    (no host-side ``x - x.mean()`` copy).
+    ``center=True`` removes each row's mean (fused into the kernel prologue
+    on the Pallas rows). ``mesh`` partitions the batch rows across devices.
     """
     B, N = x.shape
-    if dft_supported(N):
-        p = _dft.dft_power(x.astype(jnp.float32), center=center,
-                           interpret=_interpret())
-    else:
-        if center:
-            x = x - jnp.mean(x, axis=-1, keepdims=True)
-        p = ref.dft_power_ref(x)
+    row = kernel_backend() if dft_supported(N) else "xla"
+    fn = functools.partial(POWER_SPECTRUM[row], center=center)
+    p = _row_sharded(fn, mesh, x) if mesh is not None else fn(x)
     return p[:, : N // 2 + 1]
 
 
 # ---------------------------------------------------------------------------
 # autocorrelation scoring (period refinement)
 # ---------------------------------------------------------------------------
-def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray) -> jnp.ndarray:
+def _autocorr_tpu(x, lags):
+    return _ac.autocorr_score(x, lags)
+
+
+def _autocorr_gpu(x, lags):
+    return _gpu.autocorr_score(x, lags)
+
+
+def _autocorr_xla(x, lags):
+    return ref.autocorr_score_ref_xla(x, lags)
+
+
+AUTOCORR_SCORE = {"tpu": _autocorr_tpu, "gpu": _autocorr_gpu,
+                  "xla": _autocorr_xla}
+
+
+def autocorr_score(x: jnp.ndarray, lags: jnp.ndarray, *,
+                   mesh=None) -> jnp.ndarray:
     """(J, N) rows x (L,) shared candidate lags -> (J, L) scores.
 
-    Pallas kernel on TPU (and for interpret-mode validation); the numpy
-    oracle is the off-TPU fallback — interpret-mode dispatch is far slower
-    than the f64 einsum on CPU and is excluded from the surveillance hot
-    path (see cycles._refine_period_batch).
+    Pallas kernels on their target accelerators, jnp fallback elsewhere.
+    Note the decide plane's CPU hot path does not come through here at all
+    — off-accelerator ``cycles._refine_period_batch`` uses a Wiener-
+    Khinchin pocketfft pass, which beats any per-lag scoring on host.
+    ``mesh`` partitions the job rows across devices.
     """
-    if on_tpu() and x.shape[1] <= _ac.MAX_N:
-        return _ac.autocorr_score(x, lags, interpret=False)
-    return jnp.asarray(_ac.autocorr_score_ref(x, lags))
+    row = kernel_backend() if x.shape[1] <= _ac.MAX_N else "xla"
+    fn = AUTOCORR_SCORE[row]
+    if mesh is not None:
+        return _row_sharded(lambda v: fn(v, lags), mesh, x)
+    return fn(x, lags)
+
+
+def kernel_table() -> dict:
+    """Introspection: op -> {backend row -> implementing callable}. The
+    README's dispatch table and the per-backend parity tests iterate this
+    so a silently added/renamed row cannot escape coverage."""
+    return {"power_spectrum": dict(POWER_SPECTRUM),
+            "autocorr_score": dict(AUTOCORR_SCORE)}
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,23 @@ def dft_power_ref(x: jnp.ndarray) -> jnp.ndarray:
     return (f.real ** 2 + f.imag ** 2).astype(jnp.float32)
 
 
+def autocorr_score_ref_xla(x: jnp.ndarray, lags: jnp.ndarray) -> jnp.ndarray:
+    """(J, N) rows x (L,) lags -> (J, L) f32 unnormalized autocorrelation —
+    pure-jnp mirror of ``autocorr.autocorr_score`` (zero-tail masking via
+    the padded rows, lags clamped to [0, N]); the XLA row of the ops
+    dispatch table and the portable oracle for both Pallas lowerings."""
+    x = x.astype(jnp.float32)
+    J, N = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, N)))
+
+    def one(lag):
+        p = jnp.clip(lag, 0, N)
+        sh = jax.lax.dynamic_slice_in_dim(xp, p, N, axis=1)
+        return jnp.sum(x * sh, axis=1)
+
+    return jax.vmap(one, out_axes=1)(lags.astype(jnp.int32))
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   window: int = 0) -> jnp.ndarray:
     """Naive causal GQA attention. q: (B,H,S,D); k,v: (B,Hkv,S,D)."""

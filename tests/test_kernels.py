@@ -119,6 +119,100 @@ def test_dft_finds_planted_period():
 
 
 # ---------------------------------------------------------------------------
+# backend dispatch table (tpu / gpu / xla rows)
+# ---------------------------------------------------------------------------
+def test_kernel_backend_detection_and_override():
+    assert ops.kernel_backend() == "xla"        # CPU container
+    assert not ops.has_accelerator()
+    with ops.force_backend("gpu"):
+        assert ops.kernel_backend() == "gpu"
+        assert ops.on_gpu() and ops.has_accelerator() and not ops.on_tpu()
+    with ops.force_backend("tpu"):
+        assert ops.on_tpu() and ops.has_accelerator()
+    assert ops.kernel_backend() == "xla"        # override scoped
+    with pytest.raises(ValueError):
+        with ops.force_backend("cuda"):
+            pass
+
+
+def test_interpret_autodetect_off_target():
+    """interpret=None must resolve to interpret mode on a foreign host
+    (CPU here) for both kernel targets, and an explicit flag must win."""
+    from repro.kernels import backend as kb
+    assert kb.resolve_interpret("tpu", None) is True
+    assert kb.resolve_interpret("gpu", None) is True
+    assert kb.resolve_interpret("tpu", False) is False
+    # force_backend routes DISPATCH only — the physical platform still
+    # decides interpret, so a forced row never tries to compile on CPU
+    with ops.force_backend("gpu"):
+        assert kb.resolve_interpret("gpu", None) is True
+
+
+def test_kernel_table_covers_every_row():
+    table = ops.kernel_table()
+    assert set(table) == {"power_spectrum", "autocorr_score"}
+    for op, rows in table.items():
+        assert set(rows) == {"tpu", "gpu", "xla"}, op
+
+
+@pytest.mark.parametrize("row", ["tpu", "gpu", "xla"])
+def test_power_spectrum_rows_parity(row):
+    """Every dispatch row against the f64 numpy oracle (the Pallas rows run
+    in interpret mode on this host — same kernel bodies as on-target)."""
+    x = randn(5, 256) + 1.5                     # DC offset: center matters
+    with ops.force_backend(row):
+        got = np.asarray(ops.power_spectrum(x, center=True))
+    xc = np.asarray(x, np.float64)
+    xc -= xc.mean(axis=1, keepdims=True)
+    F = np.fft.fft(xc, axis=1)[:, : 129]
+    want = F.real ** 2 + F.imag ** 2
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-2)
+
+
+@pytest.mark.parametrize("row", ["tpu", "gpu", "xla"])
+def test_autocorr_rows_parity(row):
+    from repro.kernels.autocorr import autocorr_score_ref
+    x = randn(6, 256)
+    x = x - jnp.mean(x, axis=1, keepdims=True)
+    lags = jnp.asarray(RNG.integers(0, 270, 13), jnp.int32)
+    with ops.force_backend(row):
+        got = np.asarray(ops.autocorr_score(x, lags))
+    want = autocorr_score_ref(np.asarray(x), np.asarray(lags))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_dispatch_falls_back_off_tile_shapes():
+    """Shapes outside the Pallas tiling contract must take the xla row even
+    when an accelerator row is forced — callers never see a tiling error."""
+    x = randn(3, 200)                           # 200 not a T_TILE multiple
+    assert not ops.dft_supported(200)
+    with ops.force_backend("tpu"):
+        got = np.asarray(ops.power_spectrum(x, center=True))
+    xc = np.asarray(x, np.float64)
+    xc -= xc.mean(axis=1, keepdims=True)
+    F = np.fft.fft(xc, axis=1)[:, : 101]
+    np.testing.assert_allclose(got, F.real ** 2 + F.imag ** 2,
+                               rtol=2e-4, atol=2e-2)
+
+
+def test_gpu_lowerings_direct_parity():
+    """The Triton-lowered kernel bodies themselves (interpret mode here)
+    against the shared oracles, without going through dispatch."""
+    from repro.kernels import gpu
+    from repro.kernels.autocorr import autocorr_score_ref
+    x = randn(4, 512) + 0.7
+    got = np.asarray(gpu.dft_power(x, center=True))
+    want = np.asarray(ref.dft_power_ref(
+        x - jnp.mean(x, axis=-1, keepdims=True)))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-2)
+    xc = x - jnp.mean(x, axis=1, keepdims=True)
+    lags = jnp.asarray([0, 3, 17, 200, 511, 600], jnp.int32)
+    got = np.asarray(gpu.autocorr_score(xc, lags))
+    want = autocorr_score_ref(np.asarray(xc), np.asarray(lags))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("s,hkv,g,d", [(128, 1, 1, 64), (256, 2, 2, 64),

@@ -1,0 +1,176 @@
+"""Sharded decide plane: bit-parity across shard counts, overlapped-tick
+bit-identity, and the mesh plumbing.
+
+Multi-device tests skip unless the process started with
+``XLA_FLAGS=--xla_force_host_platform_device_count>=2`` — tier-1 pytest
+deliberately sees the real single CPU device (tests/conftest.py), and
+``scripts/verify.sh`` runs this file again in a forced 2-device pass, which
+is where the shard_map paths actually execute."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import characterize, postpone as pp, shard
+from repro.core.fleetsim import make_training_nb, table3_traces
+from repro.core.surveillance import SurveillanceEngine
+from repro.core.telemetry import FleetTelemetry
+from repro.kernels import ops
+
+WINDOW = 128
+
+multi = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs >= 2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count); scripts/verify.sh runs the forced pass")
+
+
+@pytest.fixture(scope="module")
+def nb():
+    return make_training_nb()
+
+
+def _build(nb, *, shards=None, overlap=False, n_jobs=13, extra=0):
+    """Deterministic fleet + engine: same args -> identical telemetry, so
+    engines built with different shard/overlap knobs are comparable."""
+    rng = np.random.default_rng(0)
+    traces = list(table3_traces(phase_s=4.0).values())
+    fleet = FleetTelemetry(n_jobs, capacity=WINDOW)
+    eng = SurveillanceEngine(shards=shards, overlap=overlap)
+    for i in range(n_jobs):
+        eng.register(f"j{i}", fleet.view(i), nb, window=WINDOW)
+    t0s = [rng.uniform(0, traces[i % len(traces)].cycle_s)
+           for i in range(n_jobs)]
+    fields = fleet.fields
+    for s in range(WINDOW + extra):
+        vals = np.asarray(
+            [[traces[i % len(traces)].sample_indexes(t0s[i] + s, rng)[f]
+              for f in fields] for i in range(n_jobs)])
+        fleet.record_fleet(s, vals)
+    return eng, fleet
+
+
+# -- mesh plumbing ----------------------------------------------------------
+def test_decide_mesh_single_device_path():
+    assert shard.decide_mesh(None) is None
+    assert shard.decide_mesh(1) is None
+    with pytest.raises(ValueError):
+        shard.decide_mesh(jax.device_count() + 1)
+
+
+@multi
+def test_decide_mesh_shape():
+    mesh = shard.decide_mesh(2)
+    assert mesh.axis_names == ("shard",) and mesh.devices.size == 2
+
+
+# -- overlapped ticks (runs on any device count) ----------------------------
+def test_overlap_tick_bit_identity(nb):
+    sync, _ = _build(nb, overlap=False)
+    lazy, _ = _build(nb, overlap=True)
+    now = WINDOW - 1
+    r_sync = sync.tick(now)
+    r_lazy = lazy.tick(now)
+    assert not r_sync.pending
+    assert r_lazy.pending                  # decide still in flight
+    assert r_lazy.remain == r_sync.remain  # first access materializes
+    assert not r_lazy.pending
+    assert (r_lazy.refitted, r_lazy.fleet) == (r_sync.refitted, r_sync.fleet)
+
+
+def test_overlap_values_survive_later_refits(nb):
+    """The lazy dict must reflect the fleet AT DISPATCH: a refit between
+    tick and first .remain access must not leak into the old result."""
+    eng, fleet = _build(nb, overlap=True, extra=0)
+    ref, _ = _build(nb, overlap=False)
+    now = WINDOW - 1
+    res = eng.tick(now)
+    want = ref.tick(now).remain
+    # mutate the engine before materializing: new samples + forced refit
+    rng = np.random.default_rng(99)
+    for s in range(WINDOW, WINDOW + 40):
+        fleet.record_fleet(s, rng.random((13, len(fleet.fields))))
+    eng.refresh(force=True)
+    assert res.remain == want
+
+
+# -- bit-parity across shard counts -----------------------------------------
+@multi
+@pytest.mark.parametrize("overlap", [False, True])
+def test_tick_bit_parity_across_shard_counts(nb, overlap):
+    ref, _ = _build(nb, shards=None, overlap=False)
+    want = ref.tick(WINDOW - 1)
+    counts = [2] + ([jax.device_count()] if jax.device_count() > 2 else [])
+    for k in counts:
+        got_eng, _ = _build(nb, shards=k, overlap=overlap)
+        got = got_eng.tick(WINDOW - 1)
+        assert got.remain == want.remain, k
+        assert (got.refitted, got.fleet) == (want.refitted, want.fleet)
+        for jid, job in ref.jobs.items():
+            other = got_eng.jobs[jid]
+            assert other.model.period == job.model.period, (k, jid)
+            np.testing.assert_array_equal(other.model.profile_lm,
+                                          job.model.profile_lm)
+            np.testing.assert_array_equal(other.lm_series, job.lm_series)
+
+
+@multi
+def test_next_refresh_step_sharded(nb):
+    """Staleness horizons are derived from the fitted models, so sharded
+    and single-device engines must agree step-for-step."""
+    ref, _ = _build(nb, shards=None, extra=9)
+    got, _ = _build(nb, shards=2, extra=9)
+    ref.refresh()
+    got.refresh()
+    for now in (WINDOW, WINDOW + 3, WINDOW + 50):
+        assert got.next_refresh_step(now) == ref.next_refresh_step(now)
+
+
+# -- sharded stage wrappers -------------------------------------------------
+@multi
+@pytest.mark.parametrize("J", [4, 7])          # multiple and non-multiple
+def test_classify_lm_sharded_parity(nb, J):
+    rng = np.random.default_rng(3)
+    W = rng.random((J, 64, 6))
+    mesh = shard.decide_mesh(2)
+    got = shard.classify_lm(nb, W, mesh)
+    want = characterize.classify_lm_batch(nb, W)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_classify_lm_matches_full_classifier(nb):
+    """The lm fast path must be bit-identical to the full classifier's lm
+    output (same argmax, same suitability table)."""
+    rng = np.random.default_rng(4)
+    W = rng.random((5, 96, 6))
+    _, lm_full, _ = characterize.classify_series_batch(nb, W)
+    np.testing.assert_array_equal(characterize.classify_lm_batch(nb, W),
+                                  lm_full)
+
+
+@multi
+@pytest.mark.parametrize("J", [6, 9])
+def test_postpone_rows_sharded_parity(J):
+    rng = np.random.default_rng(7)
+    P_max = 16
+    profiles = jnp.asarray(rng.integers(-1, 2, (J, P_max)), jnp.int8)
+    periods = jnp.asarray(rng.integers(0, P_max + 1, J), jnp.int32)
+    m_now = jnp.asarray(rng.integers(0, 500, J), jnp.int32)
+    mesh = shard.decide_mesh(2)
+    got = np.asarray(shard.postpone_rows(profiles, periods, m_now, mesh))
+    want = np.asarray(pp.postpone_batch_jit(profiles, periods, m_now))
+    np.testing.assert_array_equal(got, want)
+
+
+@multi
+def test_kernel_ops_mesh_row_sharding():
+    rng = np.random.default_rng(11)
+    mesh = shard.decide_mesh(2)
+    x = jnp.asarray(rng.standard_normal((5, 256)), jnp.float32)
+    got = np.asarray(ops.power_spectrum(x, center=True, mesh=mesh))
+    want = np.asarray(ops.power_spectrum(x, center=True))
+    np.testing.assert_array_equal(got, want)
+    lags = jnp.arange(3, 40, dtype=jnp.int32)
+    got = np.asarray(ops.autocorr_score(x, lags, mesh=mesh))
+    want = np.asarray(ops.autocorr_score(x, lags))
+    np.testing.assert_array_equal(got, want)

@@ -137,6 +137,44 @@ def test_empty_fleet_and_short_window(nb):
     assert eng.tick(15).fleet == 1
 
 
+def test_fresh_tick_zero_perjob_work(nb, monkeypatch):
+    """Decide-plane cache regression guard: a tick over an all-fresh fleet
+    (nothing stale) must not repack Algorithm 2's operands — no pack_fleet
+    call, i.e. zero per-job Python work beyond the staleness scan — and
+    must still return the correct remains via the cached operands."""
+    fleet, traces, _, _ = _fill_fleet()
+    eng = SurveillanceEngine()
+    _register_all(eng, nb, fleet)
+    want = eng.tick(WINDOW - 1).remain          # first tick builds the cache
+
+    calls = []
+    orig = pp.pack_fleet
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(pp, "pack_fleet", counting)
+    res = eng.tick(WINDOW - 1)                  # all fresh: cache hit
+    assert not calls, "fresh tick repacked the fleet (per-job Python work)"
+    assert res.remain == want and res.refitted == 0
+
+    # registration invalidates: the new job must repack on the next tick
+    lone = TelemetryBuffer(capacity=WINDOW)
+    for s in range(WINDOW):
+        lone.record(s, compute_util=0.5)
+    eng.register("late", lone, nb, window=WINDOW)
+    res = eng.tick(WINDOW - 1)
+    assert calls and "late" in res.remain
+
+    # unregister invalidates too: the job must vanish from the decide
+    calls.clear()
+    eng.unregister("late")
+    res = eng.tick(WINDOW - 1)
+    assert calls and "late" not in res.remain
+    assert res.remain == want
+
+
 def test_mixed_backing_stores_one_gather(nb):
     """window_matrix must agree across fleet views and foreign buffers."""
     fleet, traces, _, _ = _fill_fleet()
