@@ -16,6 +16,17 @@ the fabric, and records:
   * steady-state event-loop cost per 1 s step: sharded vs monolithic
     plane, vectorized vs the scalar reference loop — the fig11-style
     overhead numbers at fabric scale.
+
+Route-aware rows (ISSUE 8): the same burst on a 3-tier pod/spine fabric
+(``Topology.pod_spine``, pods x racks x pod-tier oversubscription 1:1 ->
+1:4), once with every lane pinned to route 0 (the fixed-shortest-path
+baseline) and once routed by ``pick_route`` across the spine planes.
+Route-aware must move no more contended bytes than fixed-path on every
+cell and strictly fewer on at least one oversubscribed cell;
+``route_latency`` proves the stacked defer-k x route controller sweep at
+64 candidates x 4 routes stays within ~2x of the flat-fabric sweep, and
+``route_parity`` asserts stacked-vs-reference (k, route) selections are
+bit-equal.
 """
 from __future__ import annotations
 
@@ -148,11 +159,186 @@ def sweep(racks_list: Sequence[int] = (2, 4, 8),
     return rows
 
 
+# ---------------------------------------------------------------------------
+# route-aware pod/spine rows (ISSUE 8)
+# ---------------------------------------------------------------------------
+def _pod_topology(pods: int, racks: int, oversub: float,
+                  n_spines: int = 2) -> network.Topology:
+    return network.Topology.pod_spine(
+        pods, racks, access_capacity=ACCESS,
+        pod_oversubscription=oversub, n_spines=n_spines)
+
+
+def _pod_burst(pods: int, racks: int, lanes: int,
+               rng: np.random.Generator) -> List[MigrationRequest]:
+    """A cross-rack lane ring: half the lanes stay inside their pod,
+    half cross pods — the traffic that actually exercises routing."""
+    reqs = []
+    for i in range(lanes):
+        p, r = i % pods, i % racks
+        if i % 2:
+            dst = f"p{p}r{(r + 1) % racks}h1"          # intra-pod
+        else:
+            dst = f"p{(p + 1) % pods}r{r}h1"           # cross-pod
+        reqs.append(MigrationRequest(
+            f"l{i}", 0.0, float(rng.uniform(0.5e9, 1.5e9)),
+            src=f"p{p}r{r}h0", dst=dst))
+    return reqs
+
+
+def route_config(pods: int, racks: int, lanes: int, oversub: float, *,
+                 mode: str, seed: int = 0) -> Dict:
+    """Drain one pod/spine burst with lanes routed by ``pick_route``
+    (``mode="route_aware"``) or pinned to route 0 (``mode="fixed"``)."""
+    assert mode in ("route_aware", "fixed")
+    topo = _pod_topology(pods, racks, oversub)
+    plane = ShardedPlane(topo)
+    tr = WorkloadTrace([("MEM", 60), ("CPU", 60)], 120)
+    rng = np.random.default_rng(seed)
+    for req in _pod_burst(pods, racks, lanes, rng):
+        path = plane.pick_route(req.src, req.dst) if mode == "route_aware" \
+            else topo.routes(req.src, req.dst)[0]
+        plane.launch(req, tr.rate_table, 0.0, path=path)
+    done = plane.advance(np.inf)
+    elapsed = plane.now
+    caps = topo.capacities
+    conservation = all(b <= caps[l] * elapsed * (1 + 1e-9)
+                       for l, b in plane.link_bytes.items())
+    outs = [o for _, o in done]
+    return {
+        "pods": pods, "racks_per_pod": racks, "lanes": lanes,
+        "pod_oversubscription": oversub, "mode": mode,
+        "completed": len(outs),
+        "makespan_s": round(elapsed, 2),
+        "total_bytes_GB": round(sum(o.bytes_sent for o in outs) / 1e9, 3),
+        "conservation_ok": conservation,
+    }
+
+
+def route_sweep(pods_list: Sequence[int] = (2, 3),
+                racks_list: Sequence[int] = (2,),
+                lanes_list: Sequence[int] = (8, 16),
+                oversubs: Sequence[float] = (1.0, 2.0, 4.0)
+                ) -> List[Dict]:
+    """Route-aware vs fixed-shortest-path, cell by cell. Each cell row
+    carries both modes' bytes/makespan plus the <= comparison."""
+    rows = []
+    for pods in pods_list:
+        for racks in racks_list:
+            for lanes in lanes_list:
+                for ov in oversubs:
+                    ra = route_config(pods, racks, lanes, ov,
+                                      mode="route_aware")
+                    fx = route_config(pods, racks, lanes, ov, mode="fixed")
+                    rows.append({
+                        "pods": pods, "racks_per_pod": racks,
+                        "lanes": lanes, "pod_oversubscription": ov,
+                        "route_aware_bytes_GB": ra["total_bytes_GB"],
+                        "fixed_bytes_GB": fx["total_bytes_GB"],
+                        "route_aware_makespan_s": ra["makespan_s"],
+                        "fixed_makespan_s": fx["makespan_s"],
+                        "conservation_ok": (ra["conservation_ok"]
+                                            and fx["conservation_ok"]),
+                        "route_le_fixed": (ra["total_bytes_GB"]
+                                           <= fx["total_bytes_GB"]),
+                        "route_lt_fixed": (ra["total_bytes_GB"]
+                                           < fx["total_bytes_GB"]),
+                    })
+    return rows
+
+
+def _latency_case(kind: str, n_cands: int, n_routes: int, seed: int = 0):
+    """One controller decision point: ``kind="pod"`` is the routed
+    pod/spine fabric, ``kind="flat"`` the multi_rack baseline with a
+    comparable candidate load."""
+    from repro.core.controller import AdaptiveConcurrencyController
+    from repro.core.rates import PiecewiseRate
+    rng = np.random.default_rng(seed)
+    if kind == "pod":
+        topo = _pod_topology(4, 2, 4.0, n_spines=n_routes)
+        plane = ShardedPlane(topo)
+        cands = _pod_burst(4, 2, n_cands, rng)
+    else:
+        topo = _topology(4, 4.0)
+        plane = ShardedPlane(topo)
+        cands = [MigrationRequest(
+            f"l{i}", 0.0, float(rng.uniform(0.5e9, 1.5e9)),
+            src=f"r{i % 4}h0", dst=f"r{(i + 1) % 4}h0")
+            for i in range(n_cands)]
+    rate = PiecewiseRate([60.0, 120.0], [40e6, 1e6])
+    ctl = AdaptiveConcurrencyController(plane, rate_of=lambda q: rate)
+    return ctl, cands
+
+
+def route_latency(n_cands: int = 64, n_routes: int = 4,
+                  reps: int = 5) -> Dict:
+    """Wall-clock of one stacked ``select()`` over ``n_cands``
+    candidates: defer-k x route on the pod fabric (x ``n_routes``
+    candidate routes per lane) vs plain defer-k on the flat fabric.
+    The acceptance bar is ~2x — the route stage adds one stacked pair
+    solve and one flattened cost batch on top of the common prefix
+    sweep."""
+    times = {}
+    for kind in ("pod", "flat"):
+        best = np.inf
+        for rep in range(reps):
+            ctl, cands = _latency_case(kind, n_cands, n_routes, seed=rep)
+            for r in cands:               # route stamps from prior reps
+                r.path = None             # must not pin the next run
+            t0 = time.perf_counter()
+            ctl.select(cands, 0.0)
+            best = min(best, time.perf_counter() - t0)
+        times[kind] = best
+    return {
+        "n_candidates": n_cands, "n_routes": n_routes,
+        "pod_select_ms": round(times["pod"] * 1e3, 3),
+        "flat_select_ms": round(times["flat"] * 1e3, 3),
+        "ratio": round(times["pod"] / max(times["flat"], 1e-12), 2),
+        "within_2x": times["pod"] <= 2.0 * times["flat"],
+    }
+
+
+def route_parity(seeds: Sequence[int] = range(8)) -> Dict:
+    """Stacked vs reference defer-k x route: identical launch sets and
+    identical stamped routes on every seeded decision point."""
+    from repro.core.controller import AdaptiveConcurrencyController
+    from repro.core.rates import PiecewiseRate
+    checked, ok = 0, True
+    for seed in seeds:
+        out = {}
+        for mode in ("stacked", "reference"):
+            rng = np.random.default_rng(seed)
+            topo = _pod_topology(int(rng.integers(2, 4)), 2,
+                                 float(rng.choice([1.0, 2.0, 4.0])))
+            plane = ShardedPlane(topo)
+            pods = len({topo.pod_of(h) for h in topo.host_links})
+            cands = _pod_burst(pods, 2, int(rng.integers(2, 12)), rng)
+            rate = PiecewiseRate(
+                [60.0, 120.0], [float(rng.uniform(0, 160e6)),
+                                float(rng.uniform(0, 20e6))])
+            ctl = AdaptiveConcurrencyController(
+                plane, rate_of=lambda q: rate, sweep=mode)
+            sel = ctl.select(cands, 0.0)
+            out[mode] = [(r.job_id, tuple(r.path or ())) for r in sel]
+        checked += 1
+        ok = ok and out["stacked"] == out["reference"]
+    return {"cases": checked, "selections_bit_equal": ok}
+
+
 def run():
     t0 = time.perf_counter()
     rows = sweep()
+    route_rows = route_sweep()
+    lat = route_latency()
+    parity = route_parity()
+    rows += [dict(r, route_sweep=True) for r in route_rows]
+    rows.append(dict(lat, route_latency=True))
+    rows.append(dict(parity, route_parity=True))
     dt = time.perf_counter() - t0
     ok = all(r["conservation_ok"] for r in rows if "conservation_ok" in r)
+    r_le = all(r["route_le_fixed"] for r in route_rows)
+    r_lt = any(r["route_lt_fixed"] for r in route_rows
+               if r["pod_oversubscription"] > 1.0)
     sc = max((r for r in rows if r.get("step_cost")),
              key=lambda r: r["racks"])
     return [{"name": "fabric_sweep",
@@ -160,7 +346,10 @@ def run():
              "derived": (f"conservation_ok={ok} "
                          f"vec_speedup@{sc['lanes']}lanes="
                          f"{sc['vectorized_speedup']}x "
-                         f"sharded_speedup={sc['sharded_speedup_vs_scalar']}x")
+                         f"sharded_speedup={sc['sharded_speedup_vs_scalar']}x "
+                         f"route_le_fixed={r_le} route_win={r_lt} "
+                         f"route_latency={lat['ratio']}x "
+                         f"route_parity={parity['selections_bit_equal']}")
              }], rows
 
 

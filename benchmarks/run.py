@@ -81,7 +81,8 @@ BENCH_SCHEMAS = {
         "batch_vs_scalar_at_64": dict, "sweep_timing": list,
         "contended_8x_shared_link": dict, "plane_event_loop": dict,
         "fabric_sweep": list, "controller_sweep": list,
-        "controlplane_scaling": dict, "criteria": dict,
+        "controlplane_scaling": dict, "route_sweep": dict,
+        "criteria": dict,
     },
     "BENCH_scenarios.json": {
         "host_drain": dict, "node_failure": dict, "boot_storm": dict,
@@ -230,6 +231,20 @@ def quick_migration_plane() -> None:
                           if "conservation_ok" in r)
     links_checked = sum(r.get("links_checked", 0) for r in fabric_rows)
 
+    # route-aware admission on the pod/spine fabric (ISSUE 8): a reduced
+    # cell grid (2 pods x 2 racks, 1:1 and 1:4 pod oversubscription),
+    # stacked-vs-reference (k, route) selection parity, and the stacked
+    # route sweep's decision latency vs the flat-fabric sweep at 64
+    # candidates x 4 routes
+    route_rows = fs.route_sweep(pods_list=(2,), racks_list=(2,),
+                                lanes_list=(8, 16), oversubs=(1.0, 4.0))
+    route_lat = fs.route_latency(n_cands=64, n_routes=4)
+    route_par = fs.route_parity(range(6))
+    route_le = all(r["route_le_fixed"] and r["conservation_ok"]
+                   for r in route_rows)
+    route_win = any(r["route_lt_fixed"] for r in route_rows
+                    if r["pod_oversubscription"] > 1.0)
+
     # adaptive concurrency controller vs the static share-floor gate on a
     # reduced contended grid (one 10-lane cell + one 18-lane saturation
     # cell, core 1:4): the controller must never move more bytes than the
@@ -260,6 +275,9 @@ def quick_migration_plane() -> None:
         "controlplane_scaling": {
             "sweep": cps_sweep, "fleetsim": cps_sim, "criteria": cps_crit,
         },
+        "route_sweep": {
+            "cells": route_rows, "latency": route_lat, "parity": route_par,
+        },
         "contended_8x_shared_link": {
             "immediate": {k: v for k, v in trad.items()
                           if not isinstance(v, dict)},
@@ -286,6 +304,10 @@ def quick_migration_plane() -> None:
                 cps_crit["selections_bit_equal"]
                 and cps_crit["run_with_plan_identical"]),
             "controlplane_skip_10x": cps_crit["run_with_plan_10x"],
+            "route_selection_parity": route_par["selections_bit_equal"],
+            "route_aware_le_fixed": route_le,
+            "route_aware_wins_oversubscribed": route_win,
+            "route_latency_within_2x": route_lat["within_2x"],
         },
     }
     check_bench_schema("BENCH_table6.json", payload)
@@ -326,6 +348,16 @@ def quick_migration_plane() -> None:
         f"{cps_sim}"
     assert cps_crit["run_with_plan_10x"], \
         f"event-skipping FleetSim < 10x on the sparse plan: {cps_sim}"
+    assert route_par["selections_bit_equal"], \
+        f"stacked route sweep diverged from the per-pair reference: " \
+        f"{route_par}"
+    assert route_le, \
+        f"route-aware moved more bytes than fixed-path: {route_rows}"
+    assert route_win, \
+        f"route-aware never strictly won an oversubscribed cell: " \
+        f"{route_rows}"
+    assert route_lat["within_2x"], \
+        f"stacked route sweep latency > 2x flat-fabric sweep: {route_lat}"
     sweep64 = max(r["speedup"] for r in cps_sweep
                   if r["n_candidates"] == 64)
     skip_x = max(r["speedup"] for r in cps_sim

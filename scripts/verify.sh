@@ -6,9 +6,19 @@
 # contended grid, runs the controlplane_scaling smoke — stacked defer-k
 # sweep bit-equal to the per-k reference and >= 5x at 64 candidates,
 # event-skipping FleetSim bit-identical to the per-second loop and
-# >= 10x on a sparse plan — and the fault-injection scenario smoke:
-# empty-FaultPlan parity bit-identical, node_failure RTO bounded,
-# host_drain deadline met, per-link bytes conserved across abort/retry).
+# >= 10x on a sparse plan — the route-aware pod/spine criteria: stacked
+# defer-k x route selections bit-equal to the per-pair reference,
+# route-aware bytes <= fixed-shortest-path on every cell and strictly
+# lower on an oversubscribed one, stacked route-sweep decision latency
+# within 2x of the flat-fabric sweep at 64 candidates x 4 routes — and
+# the fault-injection scenario smoke: empty-FaultPlan parity
+# bit-identical, node_failure RTO bounded, host_drain deadline met,
+# per-link bytes conserved across abort/retry).
+#
+# Tier-1 pytest includes the ISSUE 8 fabric tests: tests/test_route_sweep.py
+# (pod_spine structure, link-id table parity, stacked pair pricing,
+# sparse masked solver, controller route parity) and
+# tests/test_route_failover.py (correlated uplink outage -> failover).
 #
 # After tier-1, the sharded-decide-plane parity tests are re-run in a
 # SEPARATE pytest process with XLA_FLAGS forcing 2 virtual CPU devices

@@ -26,6 +26,16 @@ transfer's max-min fair share over the topology
 that would melt the core loses to one that migrates rack-locally. Without
 a topology the classic FFD plan is returned unchanged.
 
+On hierarchical fabrics (``Topology.pod_spine``) the byte term is
+*tier-weighted*: a transfer's bytes are scaled by the highest fabric tier
+its path climbs to (``TIER_WEIGHTS`` — spine bytes cost 4x ToR bytes,
+pod-uplink bytes 2x), because oversubscribed upper tiers are the scarce,
+fleet-shared resource. Two extra pod-affinity candidate packings (same
+rack first, then same pod, then the rest) join the sweep so a plan that
+keeps moves under one pod can actually win that scoring. Flat topologies
+have every link at tier 0 — weighted bytes equal raw bytes and the
+pre-existing behavior is unchanged.
+
 ``Placement.host_of`` is on the per-request path of every consolidation
 event; it is backed by a job->host index maintained by ``assign``/``move``
 (the FFD packer places through ``assign``), not a linear scan over hosts.
@@ -126,6 +136,24 @@ def _pack(placement: Placement, now: float,
     return new_p, plan
 
 
+# Byte multiplier per fabric tier (index = Topology.tier_of): access/ToR
+# bytes at par, pod-uplink bytes 2x, spine bytes 4x — upper tiers are the
+# oversubscribed, fleet-shared resource a consolidation plan should spare.
+TIER_WEIGHTS = (1.0, 2.0, 4.0)
+
+
+def _path_weight(topology: network.Topology,
+                 path: Sequence[str]) -> float:
+    """Tier weight of a transfer: the multiplier of the HIGHEST tier its
+    path climbs to (1.0 for empty paths and flat topologies)."""
+    w = 1.0
+    for l in path:
+        tw = TIER_WEIGHTS[min(topology.tier_of(l), len(TIER_WEIGHTS) - 1)]
+        if tw > w:
+            w = tw
+    return w
+
+
 def plan_cost(plan: Sequence[MigrationRequest],
               topology: network.Topology, *,
               dirty_rates: Optional[Dict[str, object]] = None,
@@ -136,9 +164,12 @@ def plan_cost(plan: Sequence[MigrationRequest],
     links on its src->dst path (everything else in the plan in flight),
     and the contended pre-copy cost comes from
     ``strunk.expected_cost_batch`` at those shares. Returns predicted
-    total ``bytes``, summed lane ``time``, and the share vector."""
+    total ``bytes``, tier-weighted ``weighted_bytes`` (spine bytes priced
+    above ToR bytes — equal to ``bytes`` on flat topologies), summed lane
+    ``time``, and the share vector."""
     if not plan:
-        return {"bytes": 0.0, "time": 0.0, "shares": np.zeros(0)}
+        return {"bytes": 0.0, "weighted_bytes": 0.0, "time": 0.0,
+                "shares": np.zeros(0)}
     caps = topology.capacities
     fallback = bandwidth if bandwidth is not None \
         else max(caps.values(), default=np.inf)
@@ -149,7 +180,9 @@ def plan_cost(plan: Sequence[MigrationRequest],
     rates = [(dirty_rates or {}).get(r.job_id, 0.0) for r in plan]
     sim = strunk.expected_cost_batch(v, shares, rates,
                                      np.full(len(plan), now), full=True)
+    weights = np.asarray([_path_weight(topology, p) for p in paths])
     return {"bytes": float(sim.bytes_sent.sum()),
+            "weighted_bytes": float((sim.bytes_sent * weights).sum()),
             "time": float(sim.total_time.sum()),
             "shares": shares}
 
@@ -168,9 +201,9 @@ def consolidate_ffd(placement: Placement, *, now: float = 0.0,
     MigrationRequest carrying src/dst for the fabric's link resolution.
 
     With a ``topology``, candidate packings (classic / rack-affinity /
-    stay-first; see module docstring) are scored by
-    ``(hosts_used, predicted contended bytes, predicted summed time)``
-    and the best plan wins — ``dirty_rates`` (per-job ``PiecewiseRate``
+    stay-first, plus pod-affinity variants on hierarchical fabrics; see
+    module docstring) are scored by ``(hosts_used, predicted tier-weighted
+    contended bytes, predicted summed time)`` and the best plan wins — ``dirty_rates`` (per-job ``PiecewiseRate``
     tables or constants) sharpen the byte prediction; ``bandwidth`` caps
     the share of unconstrained paths.
     """
@@ -203,11 +236,41 @@ def consolidate_ffd(placement: Placement, *, now: float = 0.0,
               stay_first=True),
     ]
 
+    if any(topology.pod_of(hid) is not None for hid in loaded_desc):
+        # hierarchical fabric: pod-affinity scan orders — same rack first,
+        # then same pod (cheap pod-uplink hop), then the rest — so a plan
+        # that never climbs to the spine can win the tier-weighted scoring
+        pod_order: Dict[Tuple, List[str]] = {}
+        for hid in loaded_desc:
+            key = (topology.access_of(hid), topology.pod_of(hid))
+            if key not in pod_order:
+                acc, pod = key
+                local = [h for h in loaded_desc
+                         if topology.access_of(h) == acc]
+                same_pod = [h for h in loaded_desc
+                            if topology.access_of(h) != acc
+                            and topology.pod_of(h) == pod]
+                rest = [h for h in loaded_desc
+                        if topology.access_of(h) != acc
+                        and topology.pod_of(h) != pod]
+                pod_order[key] = local + same_pod + rest
+
+        def pod_affinity(src: str) -> List[str]:
+            return pod_order.get(
+                (topology.access_of(src), topology.pod_of(src)),
+                loaded_desc)
+
+        candidates.append(_pack(placement, now, state_bytes,
+                                host_order_for=pod_affinity))
+        candidates.append(_pack(placement, now, state_bytes,
+                                host_order_for=pod_affinity,
+                                stay_first=True))
+
     def score(cand: Tuple[Placement, List[MigrationRequest]]):
         new_p, plan = cand
         cost = plan_cost(plan, topology, dirty_rates=dirty_rates,
                          bandwidth=bandwidth, now=now)
-        return (hosts_used(new_p), cost["bytes"], cost["time"])
+        return (hosts_used(new_p), cost["weighted_bytes"], cost["time"])
 
     return min(candidates, key=score)
 

@@ -70,6 +70,20 @@ its per-lane pre-copy recurrences and per-k share solves are the
 executable spec the stacked path must match — same selected k, same
 (bytes, time, -k) score tuple — asserted by tests/test_controlplane.py
 over random topologies and by the controlplane_scaling benchmark.
+
+On hierarchical fabrics (``Topology.pod_spine``) the sweep gains the
+*route* axis: a (src, dst) pair exposes k candidate routes (one per spine
+plane), and the decision becomes **defer-k x route**. A route stage runs
+first per multi-route component: every (lane, route) pair is priced as if
+launched alone against the in-flight set — all pairs through ONE stacked
+``fair_share_masked`` solve over one tall incidence
+(``plane.what_if_pair_shares``) and ONE flattened cost batch — and routes
+are assigned greedily in queue order, exact score ties de-conflicted
+toward less-claimed links (``_assign_routes``). The defer-k stage then
+sweeps prefixes over the ASSIGNED paths exactly as on a flat fabric, and
+launching requests get their route stamped on ``req.path``. The per-pair
+loop is kept verbatim inside ``sweep="reference"`` — identical (k, route)
+selections are asserted by tests/test_route_sweep.py.
 """
 from __future__ import annotations
 
@@ -86,6 +100,21 @@ def _default_path_of(plane):
             return tuple(req.path)
         return plane.topology.path(req.src, req.dst)
     return path_of
+
+
+def _default_routes_of(plane):
+    """Candidate routes of a request: the topology's per-pair route set.
+    A pre-stamped ``req.path`` that IS one of those routes does not pin
+    the choice (FleetSim stamps route 0 on every request at submit; the
+    sweep may still re-route it), but a custom path outside the route set
+    is honored as a fixed single route."""
+    def routes_of(req) -> Tuple[Tuple[str, ...], ...]:
+        routes = plane.topology.routes(req.src, req.dst)
+        stamped = tuple(getattr(req, "path", None) or ())
+        if stamped and stamped not in routes:
+            return (stamped,)
+        return routes
+    return routes_of
 
 
 class AdaptiveConcurrencyController:
@@ -111,11 +140,20 @@ class AdaptiveConcurrencyController:
     def __init__(self, plane, *,
                  rate_of: Optional[Callable[[object], object]] = None,
                  path_of: Optional[Callable[[object], Tuple[str, ...]]] = None,
+                 routes_of: Optional[Callable[
+                     [object], Tuple[Tuple[str, ...], ...]]] = None,
                  defer_s: float = 1.0, sweep: str = "stacked"):
         assert sweep in ("stacked", "reference")
         self.plane = plane
         self.rate_of = rate_of or (lambda req: None)
         self.path_of = path_of or _default_path_of(plane)
+        if routes_of is not None:
+            self.routes_of = routes_of
+        elif path_of is not None:
+            # a custom path resolver pins each request to that one path
+            self.routes_of = lambda req: (self.path_of(req),)
+        else:
+            self.routes_of = _default_routes_of(plane)
         self.defer_s = defer_s
         self.sweep = sweep
 
@@ -124,22 +162,126 @@ class AdaptiveConcurrencyController:
                forced: Sequence = ()) -> List:
         """The subset of ``candidates`` to launch at ``now``. ``forced``
         are requests launching regardless (max-wait wall); they are not
-        returned but their paths contend in every what-if evaluation."""
+        returned but their paths contend in every what-if evaluation.
+
+        On multi-route fabrics this is the defer-k x route sweep: the
+        route stage assigns every lane in a multi-route component its
+        route first (each (lane, route) pair priced against the in-flight
+        set in one stacked solve, greedily de-conflicted on ties), then
+        the defer-k stage sweeps prefixes over the assigned paths.
+        Launching requests (forced + the chosen prefix) get their
+        assigned route stamped on ``req.path`` so the execution plane
+        rides it; deferred candidates stay unstamped and are re-routed at
+        the next boundary. Single-route components skip the route stage —
+        flat fabrics behave exactly as before."""
         if not candidates:
             return []
-        cand_paths = [self.path_of(r) for r in candidates]
-        forced_paths = [self.path_of(r) for r in forced]
+        cand_routes = [self.routes_of(r) for r in candidates]
+        forced_routes = [self.routes_of(r) for r in forced]
+        cand_links = [tuple(l for p in rs for l in p) for rs in cand_routes]
+        forced_links = [tuple(l for p in rs for l in p)
+                        for rs in forced_routes]
         chosen: List = []
-        for idxs, busy, f_idx in self._components(cand_paths, forced_paths):
+        for idxs, busy, f_idx in self._components(cand_links, forced_links):
             group = [candidates[i] for i in idxs]
-            g_paths = [cand_paths[i] for i in idxs]
+            g_routes = [cand_routes[i] for i in idxs]
             g_forced = [forced[i] for i in f_idx]
-            g_fpaths = [forced_paths[i] for i in f_idx]
+            g_froutes = [forced_routes[i] for i in f_idx]
+            multi = any(len(rs) != 1 for rs in g_froutes + g_routes)
+            if not multi:
+                g_fpaths = [rs[0] for rs in g_froutes]
+                g_paths = [rs[0] for rs in g_routes]
+            else:
+                g_fpaths, g_paths = self._route_stage(
+                    g_forced, g_froutes, group, g_routes, now)
             k = self._best_k(group, g_paths, g_forced, g_fpaths, now)
             if k == 0 and not busy and not g_forced:
                 k = 1        # idle domain: always release the head of line
+            if multi:        # stamp assigned routes on what launches NOW
+                for r, p in zip(g_forced, g_fpaths):
+                    r.path = p
+                for r, p in zip(group[:k], g_paths[:k]):
+                    r.path = p
             chosen.extend(group[:k])
         return chosen
+
+    # -- the route stage (stage A of defer-k x route) ------------------------
+    def _route_stage(self, forced: Sequence,
+                     forced_routes: Sequence[Tuple[Tuple[str, ...], ...]],
+                     group: Sequence,
+                     group_routes: Sequence[Tuple[Tuple[str, ...], ...]],
+                     now: float
+                     ) -> Tuple[List[Tuple[str, ...]],
+                                List[Tuple[str, ...]]]:
+        """Assign every lane of a multi-route component its route.
+
+        Each (lane, route) pair is priced as if it launched ALONE against
+        everything in flight — pair j's fair share and pre-copy cost, all
+        pairs answered by ONE stacked masked solve
+        (``plane.what_if_pair_shares``) and ONE flattened cost batch in
+        the default engine, or by the per-pair loop under
+        ``sweep="reference"`` (the executable spec: same shares, same
+        costs, identical assignments). ``_assign_routes`` then picks
+        greedily, de-conflicting exact score ties toward less-claimed
+        links. Returns (forced paths, candidate paths) in input order."""
+        lanes = list(forced) + list(group)
+        routes = list(forced_routes) + list(group_routes)
+        pair_lane = [i for i, rs in enumerate(routes) for _ in rs]
+        pair_paths = [tuple(p) for rs in routes for p in rs]
+        v_lane = np.asarray([r.v_bytes for r in lanes], np.float64)
+        specs = [self.rate_of(r) for r in lanes]
+        if self.sweep == "stacked":
+            from repro.core.rates import RateBank
+            shares = self.plane.what_if_pair_shares([], pair_paths)
+            idx = np.asarray(pair_lane, np.intp)
+            bank = RateBank(specs)
+            rate_arg = bank.take(idx) if not bank.fallback \
+                else [specs[i] for i in pair_lane]
+            priced = strunk.what_if_cost_batch(
+                v_lane[idx], shares, rate_arg,
+                np.full(len(pair_paths), now), full=True)
+            p_bytes, p_time = priced.bytes_sent, priced.total_time
+        else:
+            p_bytes = np.empty(len(pair_paths))
+            p_time = np.empty(len(pair_paths))
+            for j, (i, p) in enumerate(zip(pair_lane, pair_paths)):
+                share = self.plane.what_if_shares([p])
+                out = strunk.what_if_cost_batch(
+                    v_lane[i:i + 1], share, [specs[i]],
+                    np.asarray([now]), full=True)
+                p_bytes[j] = out.bytes_sent[0]
+                p_time[j] = out.total_time[0]
+        assigned = self._assign_routes(routes, p_bytes, p_time)
+        n_f = len(forced)
+        return assigned[:n_f], assigned[n_f:]
+
+    def _assign_routes(self, routes: Sequence[Tuple[Tuple[str, ...], ...]],
+                       p_bytes: np.ndarray, p_time: np.ndarray
+                       ) -> List[Tuple[str, ...]]:
+        """Greedy deterministic route assignment over the priced pairs:
+        lanes in order (forced first, then queue order), each taking its
+        (bytes, time)-minimal route; EXACT score ties break toward the
+        route whose links carry fewer claimed lanes — in-flight lanes
+        plus earlier assignments — then toward the lowest route index
+        (= the fixed-shortest path). Shared by both sweep engines, so
+        stacked-vs-reference assignment parity reduces to share/cost
+        parity of the pair pricing."""
+        claimed = dict(self.plane.link_live_counts())
+        assigned: List[Tuple[str, ...]] = []
+        j = 0
+        for rs in routes:
+            best = None
+            for m, p in enumerate(rs):
+                load = sum(claimed.get(l, 0) for l in p)
+                key = (float(p_bytes[j + m]), float(p_time[j + m]), load, m)
+                if best is None or key < best[0]:
+                    best = (key, p)
+            _, p = best
+            for l in p:
+                claimed[l] = claimed.get(l, 0) + 1
+            assigned.append(p)
+            j += len(rs)
+        return assigned
 
     # -- grouping ------------------------------------------------------------
     def _components(self, cand_paths: Sequence[Tuple[str, ...]],

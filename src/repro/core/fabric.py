@@ -62,6 +62,8 @@ class ShardedPlane:
                  **plane_kw):
         self.topology = topology
         self.caps = topology.capacities
+        # id-indexed mirror of ``caps`` for the integer probe fast path
+        self._caps_all = topology.caps_vector().copy()
         self.vectorized = vectorized
         self._plane_kw = plane_kw
         self._fallback_bw = max(self.caps.values(), default=np.inf)
@@ -112,6 +114,11 @@ class ShardedPlane:
         adaptive controller's candidate grouping)."""
         return [d.link_set for d in self._domains]
 
+    def link_live_counts(self) -> Dict[str, int]:
+        """In-flight lane count per link (route de-confliction input for
+        ``pick_route`` and the controller's greedy route assignment)."""
+        return dict(self._live)
+
     def domain_paths(self) -> List[List[Tuple[str, ...]]]:
         """Per-domain in-flight lane paths (the controller's what-if
         baseline for each migration domain)."""
@@ -159,12 +166,25 @@ class ShardedPlane:
         co-launch can couple the probed lane to a domain its own path
         never touches); ``extra`` approximates further committed launches
         as same-path clones (legacy form)."""
-        path = self.topology.path(src, dst)
+        topo = self.topology
+        path = topo.path(src, dst)
         pend = [tuple(p) for p in pending]
         pset = frozenset(path).union(*map(frozenset, pend)) if pend \
             else frozenset(path)
-        paths = [p for d in self._hit_domains(pset)
-                 for p in d.paths_in_flight()]
+        hits = self._hit_domains(pset)
+        ids = topo.ids_of(path)
+        if ids is not None:
+            # integer fast path: all lanes' link-id arrays are precomputed
+            # (``fair_share_ids`` is the dict walk's bit-parity mirror)
+            base_ids = [pi for d in hits for pi in d.ids_in_flight()]
+            pend_ids = [topo.ids_of(p) for p in pend]
+            if all(x is not None for x in base_ids) and \
+                    all(x is not None for x in pend_ids):
+                id_paths = base_ids + pend_ids + [ids] * (extra + 1)
+                share = float(network.fair_share_ids(
+                    id_paths, self._caps_all)[-1])
+                return share if np.isfinite(share) else self._fallback_bw
+        paths = [p for d in hits for p in d.paths_in_flight()]
         paths += pend + [path] * (extra + 1)
         share = float(network.fair_share(paths, self.caps)[-1])
         return share if np.isfinite(share) else self._fallback_bw
@@ -202,13 +222,51 @@ class ShardedPlane:
         return network.what_if_prefix_shares(
             base, fixed_paths, cand_paths, self.caps, self._fallback_bw)
 
+    def what_if_pair_shares(self, fixed_paths: Sequence[Sequence[str]],
+                            pair_paths: Sequence[Sequence[str]]
+                            ) -> np.ndarray:
+        """Fair share each (candidate, route) pair would realize ON ITS
+        OWN against the ``fixed_paths`` lanes and the domains any pair or
+        fixed lane intersects — the route-selection stage of the defer-k x
+        route sweep, all pairs in one stacked solve (see
+        ``network.what_if_pair_shares``)."""
+        base = self._base_paths(
+            l for paths in (fixed_paths, pair_paths) for p in paths
+            for l in p)
+        return network.what_if_pair_shares(
+            base, fixed_paths, pair_paths, self.caps, self._fallback_bw)
+
     def path_capacity(self, src: str, dst: str) -> float:
         """Uncontended capacity of the src->dst path (tightest link a lone
         migration would traverse) — the launch gate's floor reference."""
         path = self.topology.path(src, dst)
         if not path:
             return self._fallback_bw
+        ids = self.topology.ids_of(path)
+        if ids is not None:
+            return float(self._caps_all[ids].min())
         return min(self.caps[l] for l in path)
+
+    def pick_route(self, src: str, dst: str,
+                   pending: Sequence[Sequence[str]] = ()
+                   ) -> Tuple[str, ...]:
+        """The candidate route a src->dst launch should ride right now
+        (same contract as ``MigrationPlane.pick_route``): best probed
+        fair share against the intersecting domains, ties broken toward
+        fewer live lanes on the route's links, then the lowest route
+        index. Flat pairs return ``path()`` unchanged."""
+        routes = self.topology.routes(src, dst)
+        if len(routes) == 1:
+            return routes[0]
+        shares = self.what_if_pair_shares(
+            [tuple(p) for p in pending], list(routes))
+        best, best_key = 0, None
+        for j, r in enumerate(routes):
+            load = sum(self._live.get(l, 0) for l in r)
+            key = (float(shares[j]), -load, -j)
+            if best_key is None or key > best_key:
+                best, best_key = j, key
+        return routes[best]
 
     # -- lifecycle -----------------------------------------------------------
     def _new_domain(self) -> MigrationPlane:
@@ -241,6 +299,9 @@ class ShardedPlane:
         self.topology.set_capacity(link, capacity)
         self.caps[link] = float(capacity)
         self._fallback_bw = max(self.caps.values(), default=np.inf)
+        idx = self.topology.link_ids.get(link)
+        if idx is not None:
+            self._caps_all[idx] = float(capacity)
         for d in self._domains:
             d.set_link_capacity(link, capacity)
 
@@ -256,6 +317,13 @@ class ShardedPlane:
                   ) -> List[Tuple[object, strunk.MigrationOutcome]]:
         """Abort every in-flight lane with ``host`` as an endpoint."""
         return self._abort_where(lambda d: d.fail_host(host))
+
+    def abort_link(self, link: str
+                   ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Abort every in-flight lane whose path crosses ``link`` — a
+        hard ToR/pod-uplink outage (see ``MigrationPlane.abort_link``;
+        the capacity change is the caller's move)."""
+        return self._abort_where(lambda d: d.abort_link(link))
 
     def _abort_where(self, abort_fn
                      ) -> List[Tuple[object, strunk.MigrationOutcome]]:

@@ -203,6 +203,7 @@ class FleetSim:
                  core_oversubscription: float = 1.0,
                  adaptive_concurrency: bool = False,
                  event_skip: bool = True,
+                 route_aware: bool = False,
                  fault_plan=None, evacuate_on_fail: bool = True,
                  retry_backoff_s: float = 4.0, retry_max: int = 3):
         self.jobs = {j.job_id: j for j in jobs}
@@ -247,6 +248,13 @@ class FleetSim:
         self.topology = topology
         self.placement = placement
         self.plane = ShardedPlane(self.topology)
+        # multi-route fabrics (Topology.pod_spine): re-pick each launch's
+        # route greedily at its release boundary (best probed share, see
+        # ShardedPlane.pick_route). Requests are still stamped with route
+        # 0 at submit (probe input); with the adaptive controller wired
+        # in, the controller's defer-k x route sweep stamps routes itself
+        # and this knob is moot. No-op on single-route topologies.
+        self._route_aware = route_aware
         self.lmcm.bandwidth_probe = lambda req, extra=0, pending=(): \
             self.plane.probe_bandwidth(req.src, req.dst, extra,
                                        pending=pending)
@@ -458,6 +466,14 @@ class FleetSim:
                     self._submit_restarts(ev.target, now)
             elif ev.kind == "host_recover":
                 self._down_hosts.discard(ev.target)
+            elif ev.kind == "link_fail":
+                # correlated ToR/pod-uplink outage: capacity drops AND the
+                # lanes riding the link abort into the retry path (which
+                # re-routes around the outage on multi-route fabrics) —
+                # unlike a 0.0 link_degrade, which stalls them in place
+                self.plane.set_link_capacity(ev.target, ev.capacity)
+                for req, outcome in self.plane.abort_link(ev.target):
+                    self._handle_abort(req, outcome, now, launch_info)
             else:                        # link_degrade / link_restore
                 self.plane.set_link_capacity(ev.target, ev.capacity)
 
@@ -669,6 +685,10 @@ class FleetSim:
                 launch_info[id(req)] = (job.trace.phase_at(self.now) != "MEM",
                                         self.now)
                 first_launch = min(first_launch, self.now)
+                if self._route_aware and self.lmcm.controller is None:
+                    # greedy launch-time route choice (the controller, when
+                    # wired, stamps sweep-assigned routes on req.path)
+                    req.path = self.plane.pick_route(req.src, req.dst)
                 # register the lane with its PiecewiseRate table so the
                 # plane's vectorized event loop accrues its dirty bytes
                 # through the batched lookup (see core/rates.py)

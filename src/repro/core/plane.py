@@ -64,6 +64,7 @@ class _LaneMeta:
     rate_fn: Optional[object]            # scalar callable view of ``spec``
     path: Tuple[str, ...]
     t_start: float
+    path_ids: Optional[np.ndarray] = None  # Topology.ids_of(path) fast view
 
 
 class MigrationPlane:
@@ -77,6 +78,10 @@ class MigrationPlane:
                  vectorized: bool = True):
         self.topology = topology
         self.caps = topology.capacities
+        # id-indexed snapshot of ``caps`` (aligned with topology.link_ids):
+        # the integer fast path of probe_bandwidth/path_capacity reads
+        # this; set_link_capacity keeps it in sync with the dict
+        self._caps_all = topology.caps_vector().copy()
         self.max_rounds = max_rounds
         self.stop_total_factor = stop_total_factor
         self.vectorized = vectorized
@@ -129,6 +134,12 @@ class MigrationPlane:
         """Network path of every in-flight lane (the fabric's probe input)."""
         return [m.path for m in self._meta]
 
+    def ids_in_flight(self) -> List[Optional[np.ndarray]]:
+        """Precomputed link-id array per in-flight lane (None where a
+        lane's path has links unknown to the topology — the probe fast
+        path falls back to the dict walk)."""
+        return [m.path_ids for m in self._meta]
+
     @property
     def link_set(self) -> frozenset:
         """Links any in-flight lane touches — the plane's migration domain.
@@ -159,8 +170,24 @@ class MigrationPlane:
         carries the ACTUAL paths of co-launches committed in the same
         release burst but not yet on the plane; ``extra`` approximates
         further committed launches as same-path clones (the legacy,
-        conservative-on-multilink form)."""
-        path = self.topology.path(src, dst)
+        conservative-on-multilink form).
+
+        Hot path: when every path resolves through the topology's
+        precomputed link-id tables, the solve runs over integer arrays
+        (``network.fair_share_ids`` — bit-parity mirror of the dict walk);
+        any unknown link falls back to the dict oracle wholesale."""
+        topo = self.topology
+        path = topo.path(src, dst)
+        ids = topo.ids_of(path)
+        if ids is not None and \
+                all(m.path_ids is not None for m in self._meta):
+            pend_ids = [topo.ids_of(tuple(p)) for p in pending]
+            if all(p is not None for p in pend_ids):
+                id_paths = [m.path_ids for m in self._meta]
+                id_paths += pend_ids + [ids] * (extra + 1)
+                share = float(network.fair_share_ids(
+                    id_paths, self._caps_all)[-1])
+                return share if np.isfinite(share) else self._fallback_bw
         paths = [m.path for m in self._meta]
         paths += [tuple(p) for p in pending]
         paths += [path] * (extra + 1)
@@ -194,6 +221,17 @@ class MigrationPlane:
             [m.path for m in self._meta], fixed_paths, cand_paths,
             self.caps, self._fallback_bw)
 
+    def what_if_pair_shares(self, fixed_paths: Sequence[Sequence[str]],
+                            pair_paths: Sequence[Sequence[str]]
+                            ) -> np.ndarray:
+        """Fair share each (candidate, route) pair would realize ON ITS OWN
+        against everything in flight plus the ``fixed_paths`` lanes — the
+        route-selection stage of the defer-k x route sweep, all pairs in
+        one stacked solve (see ``network.what_if_pair_shares``)."""
+        return network.what_if_pair_shares(
+            [m.path for m in self._meta], fixed_paths, pair_paths,
+            self.caps, self._fallback_bw)
+
     def path_capacity(self, src: str, dst: str) -> float:
         """Uncontended capacity of the src->dst path: the tightest link a
         lone migration would traverse (the launch gate's floor reference —
@@ -202,7 +240,45 @@ class MigrationPlane:
         path = self.topology.path(src, dst)
         if not path:
             return self._fallback_bw
+        ids = self.topology.ids_of(path)
+        if ids is not None:
+            return float(self._caps_all[ids].min())
         return min(self.caps[l] for l in path)
+
+    def link_live_counts(self) -> Dict[str, int]:
+        """In-flight lane count per link (route de-confliction input for
+        ``pick_route`` and the controller's greedy route assignment)."""
+        counts: Dict[str, int] = {}
+        for m in self._meta:
+            for l in dict.fromkeys(m.path):
+                counts[l] = counts.get(l, 0) + 1
+        return counts
+
+    def pick_route(self, src: str, dst: str,
+                   pending: Sequence[Sequence[str]] = ()
+                   ) -> Tuple[str, ...]:
+        """The candidate route a src->dst launch should ride right now:
+        best probed fair share against everything in flight (plus
+        ``pending`` same-burst co-launches), ties broken toward fewer live
+        lanes on the route's links, then the lowest route index — i.e. the
+        fixed-shortest path. Single-route (flat) pairs return ``path()``
+        unchanged. This is the launch-time greedy the benchmarks' "route-
+        aware" mode uses when no admission controller is wired in; the
+        controller's stacked sweep prices routes through
+        ``what_if_pair_shares`` instead."""
+        routes = self.topology.routes(src, dst)
+        if len(routes) == 1:
+            return routes[0]
+        shares = self.what_if_pair_shares(
+            [tuple(p) for p in pending], list(routes))
+        live = self.link_live_counts()
+        best, best_key = 0, None
+        for j, r in enumerate(routes):
+            load = sum(live.get(l, 0) for l in r)
+            key = (float(shares[j]), -load, -j)
+            if best_key is None or key > best_key:
+                best, best_key = j, key
+        return routes[best]
 
     def domain_links(self) -> List[frozenset]:
         """Link sets of the live migration domains — a monolithic plane is
@@ -220,6 +296,9 @@ class MigrationPlane:
         capacity = float(capacity)
         self.caps[link] = capacity
         self._fallback_bw = max(self.caps.values(), default=np.inf)
+        idx = self.topology.link_ids.get(link)
+        if idx is not None:
+            self._caps_all[idx] = capacity
         row = self._link_row.get(link)
         if row is not None and row < len(self._caps_vec):
             self._caps_vec[row] = capacity
@@ -245,6 +324,16 @@ class MigrationPlane:
         return self._abort_rows(
             [i for i, m in enumerate(self._meta)
              if m.req.src == host or m.req.dst == host])
+
+    def abort_link(self, link: str
+                   ) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """Abort every in-flight lane whose path crosses ``link`` — a
+        hard ToR/pod-uplink outage kills the transfers riding it while
+        lanes on other routes are untouched (unlike a degradation to 0.0,
+        which stalls flows in place until restored). The capacity change
+        itself is the caller's move (``set_link_capacity(link, 0.0)``)."""
+        return self._abort_rows(
+            [i for i, m in enumerate(self._meta) if link in m.path])
 
     def _abort_rows(self, rows: List[int]
                     ) -> List[Tuple[object, strunk.MigrationOutcome]]:
@@ -297,7 +386,8 @@ class MigrationPlane:
         p = tuple(path) if path is not None else \
             self.topology.path(req.src, req.dst)
         v = float(req.v_bytes)
-        meta = _LaneMeta(req, rate, rate_fn, p, now)
+        meta = _LaneMeta(req, rate, rate_fn, p, now,
+                         path_ids=self.topology.ids_of(p))
         self._meta.append(meta)
         self._v = np.append(self._v, v)
         self._rem = np.append(self._rem, v)

@@ -22,6 +22,15 @@ Event kinds
     and domains are unchanged; 0.0 stalls its flows until restored).
     The two kinds are synonyms mechanically — the split keeps plans
     readable and lets reports tell brownouts from repairs.
+``link_fail``
+    Correlated outage: the link's capacity drops to ``capacity``
+    (typically 0.0) AND every in-flight lane whose path crosses it is
+    aborted (``abort_link`` — partial bytes settled exactly as a host
+    failure would). Aborted requests re-enter the LMCM with backoff; on a
+    multi-route fabric the retry re-routes around the dead link, so a
+    ToR/pod-uplink loss fails the lanes over to a surviving spine plane
+    instead of stalling them in place the way a 0.0 ``link_degrade``
+    does. ``link_restore`` brings the link back.
 
 An empty plan is falsy; ``FleetSim`` treats it exactly like no plan at
 all, which is what keeps every existing benchmark and bit-identity
@@ -38,7 +47,8 @@ HOST_FAIL = "host_fail"
 HOST_RECOVER = "host_recover"
 LINK_DEGRADE = "link_degrade"
 LINK_RESTORE = "link_restore"
-KINDS = (HOST_FAIL, HOST_RECOVER, LINK_DEGRADE, LINK_RESTORE)
+LINK_FAIL = "link_fail"
+KINDS = (HOST_FAIL, HOST_RECOVER, LINK_DEGRADE, LINK_RESTORE, LINK_FAIL)
 
 
 @dataclass(frozen=True)
@@ -92,6 +102,25 @@ class FaultPlan:
         """Degrade ``link`` to ``capacity`` at ``t``, optionally restoring
         ``restore_capacity`` at ``restore_at``."""
         events = [FaultEvent(t, LINK_DEGRADE, link, capacity=capacity)]
+        if restore_at is not None:
+            if restore_capacity is None:
+                raise ValueError("restore_at needs restore_capacity "
+                                 "(the original link speed)")
+            events.append(FaultEvent(restore_at, LINK_RESTORE, link,
+                                     capacity=restore_capacity))
+        return cls(events)
+
+    @classmethod
+    def access_outage(cls, t: float, link: str, *,
+                      restore_at: Optional[float] = None,
+                      restore_capacity: Optional[float] = None
+                      ) -> "FaultPlan":
+        """Correlated rack/ToR (or pod-uplink) loss: ``link`` goes to
+        capacity 0 at ``t`` and every lane riding it aborts
+        (``link_fail`` — the retries re-route around the outage on
+        multi-route fabrics), optionally restoring ``restore_capacity``
+        at ``restore_at``."""
+        events = [FaultEvent(t, LINK_FAIL, link, capacity=0.0)]
         if restore_at is not None:
             if restore_capacity is None:
                 raise ValueError("restore_at needs restore_capacity "

@@ -155,3 +155,48 @@ def test_host_of_scales_constant_time():
         p.host_of("h199_49")
     dt = time.perf_counter() - t0
     assert dt < 0.05, dt                 # 10k scans would take far longer
+
+
+def test_tier_weighted_cost_prices_spine_above_tor():
+    """On a pod/spine fabric a cross-pod transfer's bytes are weighted by
+    the spine multiplier; flat topologies keep weighted == raw."""
+    from repro.core import network
+    from repro.core.orchestrator import MigrationRequest
+    topo = network.Topology.pod_spine(2, 2, access_capacity=125e6)
+    local = [MigrationRequest("a", 0.0, 1e9,
+                              src="p0r0h0", dst="p0r0h1")]
+    cross = [MigrationRequest("b", 0.0, 1e9,
+                              src="p0r0h0", dst="p1r0h0")]
+    c_local = cs.plan_cost(local, topo)
+    c_cross = cs.plan_cost(cross, topo)
+    assert c_local["weighted_bytes"] == pytest.approx(c_local["bytes"])
+    assert c_cross["weighted_bytes"] == pytest.approx(
+        cs.TIER_WEIGHTS[2] * c_cross["bytes"])
+    flat = network.Topology.single_link(125e6)
+    c_flat = cs.plan_cost(local, flat)
+    assert c_flat["weighted_bytes"] == c_flat["bytes"]
+
+
+def test_affinity_candidates_keep_moves_off_the_spine():
+    """Tier-weighted scoring: when a pod-local repack exists at the same
+    host count, the plan must not climb to the spine. Classic FFD would
+    funnel pod 0's jobs into pod 1's most-loaded host (3 spine
+    transfers); the affinity candidates consolidate rack-locally at the
+    same host count and win on weighted bytes."""
+    from repro.core import network
+    topo = network.Topology.pod_spine(2, 2, hosts_per_rack=2,
+                                      access_capacity=125e6,
+                                      pod_oversubscription=4.0)
+    hosts = {
+        "p0r0h0": cs.Host("p0r0h0", 2.0, {"a": 1.0}),
+        "p0r0h1": cs.Host("p0r0h1", 2.0, {"b": 1.0}),
+        "p1r0h0": cs.Host("p1r0h0", 4.0, {"c": 1.0, "d": 1.0, "e": 1.0}),
+    }
+    sb = {j: 1e9 for j in "abcde"}
+    new_p, plan = cs.consolidate_ffd(cs.Placement(hosts), state_bytes=sb,
+                                     topology=topo)
+    assert cs.hosts_used(new_p) == 2
+    assert plan                         # pod 0 still consolidates a + b
+    for req in plan:
+        p = topo.path(req.src, req.dst)
+        assert not any(l.startswith("spine:") for l in p), (req, p)

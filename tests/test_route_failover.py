@@ -1,0 +1,143 @@
+"""Correlated rack/ToR outage on a pod/spine fabric (ISSUE 8 satellite):
+``FaultPlan.access_outage`` takes a pod uplink to capacity 0 AND aborts
+every lane riding it (``link_fail``); with ``route_aware=True`` the
+LMCM retries re-route onto a surviving spine plane instead of stalling,
+and per-link byte conservation holds across abort -> retry -> reroute.
+"""
+from collections import defaultdict
+
+import numpy as np
+import pytest
+
+from repro.core import network
+from repro.core.consolidation import Host, Placement
+from repro.core.fleetsim import FleetSim, SimJob, WorkloadTrace
+from repro.core.orchestrator import MigrationRequest
+from repro.scenarios.faults import FaultPlan
+
+CAP = 125e6
+DEAD = "pod:p0s0"
+
+
+def _fabric_sim(*, route_aware, fault_plan=None, n_jobs=4, seed=0):
+    topo = network.Topology.pod_spine(
+        2, 2, access_capacity=CAP,
+        pod_oversubscription=1.0, spine_oversubscription=1.0, n_spines=2)
+    trace = WorkloadTrace([("MEM", 60.0), ("CPU", 60.0)], 120.0)
+    jobs = [SimJob(f"j{i}", trace, 2e9) for i in range(n_jobs)]
+    # jobs live on pod-0 hosts; every host is a valid endpoint
+    hosts = {h: Host(h, float(n_jobs)) for h in sorted(topo.host_links)}
+    placement = Placement(hosts)
+    for i, j in enumerate(jobs):
+        placement.assign(j.job_id, f"p0r{i % 2}h{(i // 2) % 2}", 1.0)
+    sim = FleetSim(jobs, policy="immediate", warmup_s=0.0, seed=seed,
+                   max_concurrent=8, topology=topo, placement=placement,
+                   route_aware=route_aware, fault_plan=fault_plan)
+    plan = [MigrationRequest(j.job_id, sim.now + 2.0, j.v_bytes,
+                             src=placement.host_of(j.job_id),
+                             dst=f"p1r{i % 2}h{(i // 2) % 2}")
+            for i, j in enumerate(jobs)]
+    return sim, plan
+
+
+def _check_link_conservation(res, rtol=1e-6):
+    """Every byte the plane billed to a link is accounted for by either
+    an aborted lane's settled partial or a completed migration."""
+    expected = defaultdict(float)
+    for _, _, partial, path in res.abort_log:
+        for link in path:
+            expected[link] += partial
+    for req in res.migrations:
+        for link in req.path:
+            expected[link] += res.per_job[req.job_id].bytes_sent
+    links = set(expected) | {l for l, b in res.link_bytes.items() if b}
+    assert links
+    for link in links:
+        assert res.link_bytes.get(link, 0.0) == pytest.approx(
+            expected.get(link, 0.0), rel=rtol), link
+
+
+def test_route_aware_spreads_across_planes():
+    """Healthy fabric: pick_route puts concurrent cross-pod lanes on
+    more than one spine plane."""
+    sim, plan = _fabric_sim(route_aware=True)
+    res = sim.run_with_plan(plan, horizon_s=3000.0)
+    assert len(res.per_job) == len(plan) and not res.failed_jobs
+    planes = {l for r in res.migrations for l in r.path
+              if l.startswith("pod:p0")}
+    assert len(planes) > 1, planes
+
+
+def test_access_outage_fails_over_to_surviving_route():
+    fp = FaultPlan.access_outage(10.0, DEAD)
+    sim, plan = _fabric_sim(route_aware=True, fault_plan=fp)
+    res = sim.run_with_plan(plan, horizon_s=3000.0)
+    # lanes were riding the dead uplink and aborted when it failed
+    assert res.n_aborts > 0
+    assert all(DEAD in path for _, _, _, path in res.abort_log)
+    # every job still completed — the retries re-routed around the loss
+    assert len(res.per_job) == len(plan) and not res.failed_jobs
+    aborted = {j for j, _, _, _ in res.abort_log}
+    assert aborted
+    for req in res.migrations:
+        if req.job_id in aborted:
+            assert DEAD not in req.path, req.job_id
+    # the dead link froze: only pre-outage partials are billed to it
+    partials = sum(p for _, _, p, path in res.abort_log if DEAD in path)
+    assert res.link_bytes.get(DEAD, 0.0) == pytest.approx(partials)
+    _check_link_conservation(res)
+
+
+def test_access_outage_conservation_seeded():
+    for seed in range(3):
+        fp = FaultPlan.access_outage(10.0, DEAD, restore_at=400.0,
+                                     restore_capacity=CAP)
+        sim, plan = _fabric_sim(route_aware=True, fault_plan=fp,
+                                seed=seed)
+        res = sim.run_with_plan(plan, horizon_s=3000.0)
+        assert not res.failed_jobs
+        _check_link_conservation(res)
+
+
+def test_link_fail_vs_degrade_semantics():
+    """``link_fail`` aborts the lanes; a 0.0 ``link_degrade`` stalls them
+    in place — same capacity change, different lane fate."""
+    res = {}
+    for kind, fp in [
+            ("fail", FaultPlan.access_outage(10.0, DEAD,
+                                             restore_at=200.0,
+                                             restore_capacity=CAP)),
+            ("degrade", FaultPlan.link_brownout(10.0, DEAD, 0.0,
+                                                restore_at=200.0,
+                                                restore_capacity=CAP))]:
+        sim, plan = _fabric_sim(route_aware=False, fault_plan=fp)
+        res[kind] = sim.run_with_plan(plan, horizon_s=3000.0)
+    assert res["fail"].n_aborts > 0
+    assert res["degrade"].n_aborts == 0
+    assert not res["fail"].failed_jobs and not res["degrade"].failed_jobs
+
+
+def test_route_aware_noop_on_flat_topology():
+    """On a single-route fabric the knob changes nothing: identical
+    outcomes bit for bit."""
+    out = {}
+    for ra in (False, True):
+        topo = network.Topology.multi_rack(2, CAP, core_capacity=CAP,
+                                           hosts_per_rack=2)
+        trace = WorkloadTrace([("MEM", 60.0), ("CPU", 60.0)], 120.0)
+        jobs = [SimJob(f"j{i}", trace, 1e9) for i in range(3)]
+        hosts = {h: Host(h, 4.0) for h in sorted(topo.host_links)}
+        placement = Placement(hosts)
+        for i, j in enumerate(jobs):
+            placement.assign(j.job_id, f"r0h{i % 2}", 1.0)
+        sim = FleetSim(jobs, policy="immediate", warmup_s=0.0, seed=0,
+                       max_concurrent=8, topology=topo,
+                       placement=placement, route_aware=ra)
+        plan = [MigrationRequest(j.job_id, sim.now + 2.0, j.v_bytes,
+                                 src=placement.host_of(j.job_id),
+                                 dst=f"r1h{i % 2}")
+                for i, j in enumerate(jobs)]
+        r = sim.run_with_plan(plan, horizon_s=3000.0)
+        out[ra] = (r.total_bytes, r.total_time, r.link_bytes,
+                   r.completed_at, sim.now)
+    assert out[False] == out[True]

@@ -1,0 +1,421 @@
+"""Route-aware one-solve admission on pod/spine fabrics (ISSUE 8).
+
+The load-bearing contracts:
+
+  * ``Topology.pod_spine`` builds the 3-tier access -> pod -> spine
+    fabric the module docstring draws: per-tier oversubscription shrinks
+    the capacities exactly as documented, every distinct-rack pair
+    exposes one candidate route per spine plane, route 0 is the
+    canonical ``path()``, and same-rack pairs stay single-route;
+  * the precomputed link-id tables (``ids_of`` / ``fair_share_ids``) are
+    bit-parity mirrors of the dict-walk oracle — same progressive
+    filling, same member order, same summation;
+  * ``what_if_pair_shares`` (ONE stacked masked solve over the flattened
+    (lane, route) axis) returns exactly what the per-pair reference loop
+    computes, on the raw network function and through both planes;
+  * the sparse masked solver agrees with the dense path and — when a
+    scenario's active columns form a prefix — with the python
+    ``fair_share`` summation exactly;
+  * the controller's defer-k x route sweep selects identical launch sets
+    AND stamps identical routes under ``sweep="stacked"`` and
+    ``sweep="reference"`` over seeded random pod/spine decision points.
+
+Hypothesis widens the search when installed (``_hypothesis_compat``
+degrades the ``@given`` tests to skips otherwise); the seeded variants
+run the same invariants regardless.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import network
+from repro.core.controller import AdaptiveConcurrencyController
+from repro.core.fabric import ShardedPlane
+from repro.core.orchestrator import MigrationRequest
+from repro.core.plane import MigrationPlane
+from repro.core.rates import PiecewiseRate
+
+CAP = 125e6
+
+
+def _fabric(pods=2, racks=2, *, pod_over=2.0, spine_over=2.0, n_spines=2):
+    return network.Topology.pod_spine(
+        pods, racks, access_capacity=CAP,
+        pod_oversubscription=pod_over, spine_oversubscription=spine_over,
+        n_spines=n_spines)
+
+
+# ---------------------------------------------------------------------------
+# pod_spine structure
+# ---------------------------------------------------------------------------
+def test_pod_spine_tiers_and_capacities():
+    topo = _fabric(pods=3, racks=2, pod_over=4.0, spine_over=2.0,
+                   n_spines=2)
+    uplink = 2 * CAP / (4.0 * 2)           # racks * access / (over * spines)
+    spine = 3 * uplink / 2.0               # pods * uplink / over
+    for p in range(3):
+        for r in range(2):
+            l = f"acc:p{p}r{r}"
+            assert topo.capacities[l] == CAP and topo.tier_of(l) == 0
+        for m in range(2):
+            l = f"pod:p{p}s{m}"
+            assert topo.capacities[l] == pytest.approx(uplink)
+            assert topo.tier_of(l) == 1
+    for m in range(2):
+        assert topo.capacities[f"spine:s{m}"] == pytest.approx(spine)
+        assert topo.tier_of(f"spine:s{m}") == 2
+    assert topo.pod_of("p2r1h0") == "p2"
+    assert topo.pod_of("nonexistent") is None
+
+
+def test_pod_spine_routes():
+    topo = _fabric(pods=2, racks=2, n_spines=3)
+    assert topo.n_routes() == 3
+    # same rack: one route, no shared fabric links
+    assert topo.routes("p0r0h0", "p0r0h1") == (("acc:p0r0",),)
+    # cross-rack same-pod: one route per spine plane, through that
+    # plane's pod uplink only (no spine hop needed inside a pod)
+    rs = topo.routes("p0r0h0", "p0r1h0")
+    assert len(rs) == 3
+    for m, p in enumerate(rs):
+        assert f"pod:p0s{m}" in p and not any("spine" in l for l in p)
+    # cross-pod: each route rides plane m end to end
+    rs = topo.routes("p0r0h0", "p1r1h0")
+    assert len(rs) == 3
+    for m, p in enumerate(rs):
+        assert f"pod:p0s{m}" in p and f"spine:s{m}" in p \
+            and f"pod:p1s{m}" in p
+    # route 0 IS the canonical fixed-shortest path
+    assert rs[0] == topo.path("p0r0h0", "p1r1h0")
+
+
+def test_route_ids_mirror_routes():
+    topo = _fabric()
+    for pair in [("p0r0h0", "p1r1h1"), ("p0r0h0", "p0r1h0")]:
+        for p, ids in zip(topo.routes(*pair), topo.route_ids(*pair)):
+            assert ids is not None
+            assert [topo.link_ids[l] for l in p] == list(ids)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: link-id tables vs the dict-walk oracle
+# ---------------------------------------------------------------------------
+def _random_fabric_paths(rng, topo, n):
+    hosts = sorted(topo.host_links)
+    paths = []
+    for _ in range(n):
+        src, dst = rng.choice(hosts, size=2, replace=False)
+        rs = topo.routes(src, dst)
+        paths.append(rs[int(rng.integers(len(rs)))])
+    return paths
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_fair_share_ids_bit_parity(seed):
+    rng = np.random.default_rng(seed)
+    topo = _fabric(pods=int(rng.integers(2, 4)),
+                   racks=int(rng.integers(2, 4)),
+                   pod_over=float(rng.choice([1.0, 2.0, 4.0])))
+    paths = _random_fabric_paths(rng, topo, int(rng.integers(1, 12)))
+    oracle = network.fair_share(paths, topo.capacities)
+    ids = network.fair_share_ids([topo.ids_of(p) for p in paths],
+                                 topo.caps_vector())
+    assert np.array_equal(oracle, ids)      # bit-exact, not allclose
+
+
+def test_ids_of_unknown_link_falls_back():
+    topo = _fabric()
+    assert topo.ids_of(("acc:p0r0", "no-such-link")) is None
+    # None ids -> unconstrained in fair_share_ids, like an empty path
+    out = network.fair_share_ids([None], topo.caps_vector())
+    assert np.isinf(out[0])
+
+
+def test_caps_vector_tracks_set_capacity():
+    topo = _fabric()
+    idx = topo.link_ids["pod:p0s0"]
+    topo.set_capacity("pod:p0s0", 7.0)
+    assert topo.caps_vector()[idx] == 7.0
+    assert topo.capacities["pod:p0s0"] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# stacked pair pricing vs the per-pair reference
+# ---------------------------------------------------------------------------
+def test_pair_active_mask_one_route_per_lane():
+    m = network.pair_active_mask(2, 1, 4)
+    assert m.shape == (4, 7)
+    assert m[:, :3].all()                   # base + fixed always active
+    assert np.array_equal(m[:, 3:], np.eye(4, dtype=bool))
+    for row in m:                           # exactly one pair column per row
+        assert row[3:].sum() == 1
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_what_if_pair_shares_matches_per_pair(seed):
+    rng = np.random.default_rng(100 + seed)
+    topo = _fabric(pods=2, racks=2,
+                   pod_over=float(rng.choice([1.0, 2.0, 4.0])))
+    base = _random_fabric_paths(rng, topo, int(rng.integers(0, 4)))
+    fixed = _random_fabric_paths(rng, topo, int(rng.integers(0, 3)))
+    pairs = _random_fabric_paths(rng, topo, int(rng.integers(1, 10)))
+    fb = max(topo.capacities.values())
+    stacked = network.what_if_pair_shares(base, fixed, pairs,
+                                          topo.capacities, fb)
+    for j, p in enumerate(pairs):
+        alone = network.fair_share(base + fixed + [p], topo.capacities)
+        want = alone[-1] if np.isfinite(alone[-1]) else fb
+        assert stacked[j] == want, (seed, j)
+
+
+def test_what_if_pair_shares_empty():
+    topo = _fabric()
+    out = network.what_if_pair_shares([], [], [], topo.capacities, CAP)
+    assert out.shape == (0,)
+
+
+@pytest.mark.parametrize("plane_cls", [MigrationPlane, ShardedPlane])
+def test_plane_pair_shares_match_reference(plane_cls):
+    topo = _fabric(pod_over=4.0)
+    plane = plane_cls(topo)
+    rate = PiecewiseRate([60.0, 120.0], [40e6, 1e6])
+    for i in range(3):
+        plane.launch(MigrationRequest(f"bg{i}", 0.0, 2e9,
+                                      src="p0r0h0", dst="p1r0h0"),
+                     rate, 0.0)
+    pairs = [p for pair in [("p0r0h1", "p1r1h0"), ("p0r1h0", "p0r0h1")]
+             for p in topo.routes(*pair)]
+    stacked = plane.what_if_pair_shares([], pairs)
+    for j, p in enumerate(pairs):
+        assert stacked[j] == plane.what_if_shares([p])[0], j
+
+
+# ---------------------------------------------------------------------------
+# sparse masked solver
+# ---------------------------------------------------------------------------
+def _masked_case(rng, n_links=8):
+    links = [f"L{i}" for i in range(n_links)]
+    caps = {l: float(rng.uniform(0.5, 50.0)) for l in links}
+    n = int(rng.integers(1, 12))
+    paths = [tuple(rng.choice(links, size=rng.integers(1, 4),
+                              replace=False)) for _ in range(n)]
+    inc = np.zeros((n_links, n))
+    for i, p in enumerate(paths):
+        for l in p:
+            inc[links.index(l), i] = 1.0
+    active = rng.random((int(rng.integers(1, 6)), n)) < 0.7
+    return paths, caps, inc, np.asarray([caps[l] for l in links]), active
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_sparse_masked_matches_dense(seed):
+    rng = np.random.default_rng(200 + seed)
+    _, _, inc, caps, active = _masked_case(rng)
+    dense = network.fair_share_masked(inc, caps, active, sparse=False)
+    sparse = network.fair_share_masked(inc, caps, active, sparse=True)
+    np.testing.assert_allclose(sparse, dense, rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_sparse_masked_prefix_exact_vs_python(seed):
+    """Prefix-active scenarios sum over ascending member columns — the
+    same order as the python oracle, so equality is exact."""
+    rng = np.random.default_rng(300 + seed)
+    paths, caps, inc, caps_vec, _ = _masked_case(rng)
+    n = len(paths)
+    active = np.zeros((n, n), bool)
+    for k in range(n):
+        active[k, :k + 1] = True
+    sparse = network.fair_share_masked(inc, caps_vec, active, sparse=True)
+    for k in range(n):
+        oracle = network.fair_share(paths[:k + 1], caps)
+        oracle = np.where(np.isfinite(oracle), oracle, np.inf)
+        assert np.array_equal(sparse[k, :k + 1], oracle), (seed, k)
+        assert not sparse[k, k + 1:].any()
+
+
+def test_sparse_auto_threshold_keeps_small_cases_dense():
+    """Below the cell/link thresholds the dispatcher must stay on the
+    dense engine — the bit-for-bit contract of every existing caller."""
+    rng = np.random.default_rng(7)
+    _, _, inc, caps, active = _masked_case(rng, n_links=4)
+    auto = network.fair_share_masked(inc, caps, active)
+    dense = network.fair_share_masked(inc, caps, active, sparse=False)
+    assert np.array_equal(auto, dense)
+
+
+# ---------------------------------------------------------------------------
+# controller: defer-k x route, stacked vs reference
+# ---------------------------------------------------------------------------
+def _route_case(seed):
+    """A random pod/spine decision point. Rebuilt per engine — select()
+    stamps routes on launching requests, so parity runs need twins."""
+    rng = np.random.default_rng(seed)
+    pods = int(rng.integers(2, 4))
+    racks = int(rng.integers(2, 4))
+    topo = network.Topology.pod_spine(
+        pods, racks, access_capacity=CAP,
+        pod_oversubscription=float(rng.choice([1.0, 2.0, 4.0])),
+        spine_oversubscription=float(rng.choice([1.0, 2.0])),
+        n_spines=int(rng.integers(2, 4)))
+    plane = ShardedPlane(topo)
+    rates = {}
+
+    def req(tag, i):
+        p, r = int(rng.integers(pods)), int(rng.integers(racks))
+        q, s = int(rng.integers(pods)), int(rng.integers(racks))
+        r_ = MigrationRequest(
+            f"{tag}{i}", 0.0, float(rng.uniform(0.2e9, 2e9)),
+            src=f"p{p}r{r}h0", dst=f"p{q}r{s}h1")
+        rates[r_.job_id] = PiecewiseRate(
+            [60.0, 120.0], [float(rng.uniform(0, 160e6)),
+                            float(rng.uniform(0, 20e6))],
+            offset=float(rng.uniform(0, 120)))
+        return r_
+
+    for i in range(int(rng.integers(0, 4))):
+        r = req("bg", i)
+        plane.launch(r, rates[r.job_id], 0.0)
+    plane.advance(float(rng.uniform(0, 5)))
+    cands = [req("c", i) for i in range(int(rng.integers(1, 9)))]
+    forced = [req("f", i) for i in range(int(rng.integers(0, 3)))]
+    return plane, rates, cands, forced, plane.now
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_route_selection_parity_seeded(seed):
+    """Identical (k, route) decisions: same launched job ids in the same
+    order, and bit-identical stamped routes on forced + launched."""
+    for trial in range(12):
+        s = seed * 1000 + trial
+        out = {}
+        for mode in ("stacked", "reference"):
+            plane, rates, cands, forced, now = _route_case(s)
+            ctl = AdaptiveConcurrencyController(
+                plane, rate_of=lambda q: rates[q.job_id], sweep=mode)
+            sel = ctl.select(cands, now, forced=forced)
+            out[mode] = ([r.job_id for r in sel],
+                         [tuple(r.path or ()) for r in sel],
+                         [tuple(r.path or ()) for r in forced])
+        assert out["stacked"] == out["reference"], s
+
+
+def test_routes_stamped_only_on_launching():
+    """Deferred candidates must come back route-unpinned so the next
+    boundary can re-route them."""
+    topo = _fabric(pod_over=4.0)
+    plane = ShardedPlane(topo)
+    rate = PiecewiseRate([60.0, 120.0], [40e6, 1e6])
+    cands = [MigrationRequest(f"c{i}", 0.0, 4e9,
+                              src="p0r0h0", dst="p1r0h0")
+             for i in range(6)]
+    ctl = AdaptiveConcurrencyController(plane, rate_of=lambda q: rate)
+    sel = ctl.select(cands, 0.0)
+    assert sel                               # idle domain releases >= 1
+    chosen = {r.job_id for r in sel}
+    routes = set(topo.routes("p0r0h0", "p1r0h0"))
+    for r in cands:
+        if r.job_id in chosen:
+            assert tuple(r.path) in routes
+        else:
+            assert not getattr(r, "path", None)
+
+
+def test_route_stage_spreads_identical_lanes():
+    """Two equal lanes between the same racks must land on different
+    spine planes (tie de-confliction toward less-claimed links)."""
+    topo = _fabric(pod_over=1.0, spine_over=1.0)
+    plane = ShardedPlane(topo)
+    rate = PiecewiseRate([60.0, 120.0], [1e6, 1e6])
+    cands = [MigrationRequest(f"j{i}", 0.0, 1e9,
+                              src="p0r0h0", dst="p0r1h0")
+             for i in range(2)]
+    ctl = AdaptiveConcurrencyController(plane, rate_of=lambda q: rate)
+    sel = ctl.select(cands, 0.0)
+    if len(sel) == 2:
+        assert tuple(sel[0].path) != tuple(sel[1].path)
+
+
+def test_custom_path_pins_single_route():
+    """A stamped path OUTSIDE the topology's route set is honored as a
+    fixed single route (operator-pinned lanes must not be re-routed)."""
+    topo = _fabric()
+    plane = ShardedPlane(topo)
+    pinned = ("acc:p0r0", "acc:p1r0")       # not a fabric route
+    r = MigrationRequest("pin", 0.0, 1e9, src="p0r0h0", dst="p1r0h0")
+    r.path = pinned
+    ctl = AdaptiveConcurrencyController(plane)
+    assert ctl.routes_of(r) == (pinned,)
+    sel = ctl.select([r], 0.0)
+    assert sel and tuple(r.path) == pinned
+
+
+# ---------------------------------------------------------------------------
+# satellite 3: hypothesis search over the route-expanded masked solver
+# ---------------------------------------------------------------------------
+LINKS = [f"L{i}" for i in range(6)]
+
+if HAS_HYPOTHESIS:
+    route_set = st.lists(                    # one lane's candidate routes
+        st.lists(st.sampled_from(LINKS), min_size=1, max_size=3,
+                 unique=True).map(tuple),
+        min_size=1, max_size=3)
+    lanes_strategy = st.lists(route_set, min_size=1, max_size=6)
+    caps_strategy = st.fixed_dictionaries(
+        {l: st.floats(min_value=0.5, max_value=50.0) for l in LINKS})
+else:
+    lanes_strategy = caps_strategy = None
+
+
+def _pair_layout(lanes):
+    pair_paths = [p for rs in lanes for p in rs]
+    pair_lane = [i for i, rs in enumerate(lanes) for _ in rs]
+    return pair_paths, pair_lane
+
+
+def _check_pair_invariants(lanes, caps):
+    """Stacked pair pricing == per-pair oracle, and every scenario row of
+    the underlying mask solve is feasible (per-link <= capacity)."""
+    pair_paths, _ = _pair_layout(lanes)
+    fb = max(caps.values())
+    stacked = network.what_if_pair_shares([], [], pair_paths, caps, fb)
+    for j, p in enumerate(pair_paths):
+        alone = network.fair_share([p], caps)
+        want = alone[0] if np.isfinite(alone[0]) else fb
+        assert stacked[j] == want
+        assert stacked[j] <= min(caps[l] for l in p) * (1 + 1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(lanes=lanes_strategy, caps=caps_strategy)
+def test_pair_shares_oracle_equality(lanes, caps):
+    _check_pair_invariants(lanes, caps)
+
+
+@settings(max_examples=100, deadline=None)
+@given(lanes=lanes_strategy, caps=caps_strategy)
+def test_pair_mask_validity(lanes, caps):
+    pair_paths, pair_lane = _pair_layout(lanes)
+    m = network.pair_active_mask(0, 0, len(pair_paths))
+    for row in m:
+        on = np.flatnonzero(row)
+        assert len(on) == 1                  # one (lane, route) per scenario
+        int(pair_lane[on[0]])                # indexes a real lane
+
+
+@settings(max_examples=80, deadline=None)
+@given(lanes=lanes_strategy, caps=caps_strategy,
+       base=lanes_strategy)
+def test_pair_shares_with_base_lanes(lanes, caps, base):
+    """With in-flight lanes the stacked diagonal still equals the
+    per-pair fair_share(base + [pair]) oracle."""
+    base_paths = [rs[0] for rs in base]
+    pair_paths, _ = _pair_layout(lanes)
+    fb = max(caps.values())
+    stacked = network.what_if_pair_shares(base_paths, [], pair_paths,
+                                          caps, fb)
+    for j, p in enumerate(pair_paths):
+        alone = network.fair_share(base_paths + [p], caps)
+        want = alone[-1] if np.isfinite(alone[-1]) else fb
+        assert stacked[j] == want
