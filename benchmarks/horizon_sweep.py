@@ -1,0 +1,239 @@
+"""Receding-horizon admission sweep — horizon vs myopic controller.
+
+ISSUE 9's acceptance bench. Both arms run the SAME fleet, plan, seeds,
+and adaptive concurrency controller; the only difference is the
+``horizon`` knob:
+
+  * ``myopic``  — the PR 8 controller: queue-order defer-k prefix sweep
+    per migration domain, deferrals wake one sampling period out;
+  * ``horizon`` — receding-horizon admission: subset selection over
+    queue-order AND benefit-order prefixes, in-flight lanes repriced
+    mid-round (``lane_state`` -> ``strunk.ResumeState``), and deferred
+    candidates priced/woken at their predicted workload-cycle trough
+    (Alg. 2 RemainTime read through ``SurveillanceEngine.next_trough``).
+
+Cells are load x fabric: cyclic loads (the paper's table-3 MEM/IDLE
+alternation and a slower diurnal profile) are where trough timing pays;
+the flat acyclic load has no trough to wait for, so horizon must fall
+back to myopic behavior and never regress. The acceptance contract:
+
+  * horizon's measured contended bytes <= myopic's on EVERY cell;
+  * strictly lower on at least one cyclic-load cell;
+  * one horizon ``select()`` at 64 candidates costs <= 2x the myopic
+    stacked sweep (the subset search adds one benefit-order ladder and
+    an in-flight repricing batch, not a combinatorial blowup);
+  * with ``horizon=False`` the stacked and per-k reference sweeps pick
+    bit-identically (the PR 8 parity contract survives the refactor).
+
+``benchmarks.run --quick`` runs a reduced grid and asserts all four.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import network
+from repro.core.consolidation import Host, Placement
+from repro.core.controller import AdaptiveConcurrencyController
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import (FleetSim, PAPER_BANDWIDTH, SimJob,
+                                 WorkloadTrace)
+from repro.core.orchestrator import MigrationRequest
+from repro.core.rates import PiecewiseRate
+
+ACCESS = PAPER_BANDWIDTH                  # 1 Gbit/s access links
+
+# load name -> (phases, total_s, warmup_s, horizon_s, cyclic?)
+LOADS: Dict[str, Tuple[list, float, float, float, bool]] = {
+    "table3_cyclic": ([("MEM", 60.0), ("IDLE", 60.0)],
+                      3600.0, 500.0, 4000.0, True),
+    "diurnal_cyclic": ([("CPU", 90.0), ("MEM", 90.0),
+                        ("IO", 90.0), ("IDLE", 90.0)],
+                       7200.0, 1500.0, 6000.0, True),
+    "flat_acyclic": ([("CPU", 60.0)], 3600.0, 200.0, 4000.0, False),
+}
+FABRICS = ("shared_link", "star")
+
+
+def _fleet(load: str, fabric: str, horizon: bool, n_jobs: int, seed: int,
+           event_skip: bool = True):
+    """One fleet + its migration plan. Both arms get byte-identical
+    inputs; jobs are de-phased so their troughs disagree (subset
+    selection has real timing choices to make)."""
+    phases, total_s, warmup_s, horizon_s, _ = LOADS[load]
+    jobs = [SimJob(f"j{i}",
+                   WorkloadTrace(phases, total_s, offset=15.0 * i), 1e9)
+            for i in range(n_jobs)]
+    placement = None
+    if fabric == "star":
+        hosts = {f"s{i}": Host(f"s{i}", 1.0, {j.job_id: 1.0})
+                 for i, j in enumerate(jobs)}
+        hosts["sink"] = Host("sink", float(n_jobs))
+        placement = Placement(hosts)
+    sim = FleetSim(jobs, policy="immediate", warmup_s=warmup_s,
+                   max_concurrent=n_jobs, seed=seed, placement=placement,
+                   adaptive_concurrency=not horizon, horizon=horizon,
+                   event_skip=event_skip)
+    plan = [MigrationRequest(j.job_id, sim.now + 5.0, j.v_bytes,
+                             dst="sink" if fabric == "star" else "")
+            for j in jobs]
+    return sim, plan, horizon_s
+
+
+def run_cell(load: str, fabric: str, horizon: bool, *, n_jobs: int = 8,
+             seed: int = 5, event_skip: bool = True) -> Dict:
+    sim, plan, horizon_s = _fleet(load, fabric, horizon, n_jobs, seed,
+                                  event_skip)
+    res = sim.run_with_plan(plan, horizon_s=horizon_s)
+    return {
+        "load": load, "fabric": fabric,
+        "arm": "horizon" if horizon else "myopic",
+        "completed": len(res.per_job), "requested": len(plan),
+        "total_bytes_GB": round(res.total_bytes / 1e9, 4),
+        "sum_time_s": round(res.total_time, 2),
+        "makespan_s": round(res.makespan, 1),
+    }
+
+
+def sweep(loads: Sequence[str] = tuple(LOADS), fabrics: Sequence[str]
+          = FABRICS, n_jobs: int = 8, seed: int = 5) -> List[Dict]:
+    """The load x fabric grid, one merged row per cell."""
+    rows: List[Dict] = []
+    for load in loads:
+        for fabric in fabrics:
+            arm = {h: run_cell(load, fabric, h, n_jobs=n_jobs, seed=seed)
+                   for h in (False, True)}
+            rows.append({
+                "load": load, "fabric": fabric,
+                "cyclic": LOADS[load][4],
+                "myopic_bytes_GB": arm[False]["total_bytes_GB"],
+                "horizon_bytes_GB": arm[True]["total_bytes_GB"],
+                "myopic_sum_time_s": arm[False]["sum_time_s"],
+                "horizon_sum_time_s": arm[True]["sum_time_s"],
+                "myopic_makespan_s": arm[False]["makespan_s"],
+                "horizon_makespan_s": arm[True]["makespan_s"],
+                "all_completed": all(
+                    a["completed"] == a["requested"] for a in arm.values()),
+                "horizon_le_myopic": (arm[True]["total_bytes_GB"]
+                                      <= arm[False]["total_bytes_GB"]),
+                "horizon_lt_myopic": (arm[True]["total_bytes_GB"]
+                                      < arm[False]["total_bytes_GB"]),
+            })
+    return rows
+
+
+# -- decision latency & parity (one decision point, not a whole sim) -------
+def _decision_case(n_cands: int, racks: int, seed: int):
+    """A contended decision point with lanes already mid-flight — the
+    in-flight repricing path is exercised, not just the cold sweep."""
+    topo = network.Topology.multi_rack(
+        racks, ACCESS, core_capacity=racks * ACCESS / 2.0, hosts_per_rack=2)
+    plane = ShardedPlane(topo)
+    rng = np.random.default_rng(seed)
+    rates: Dict[str, PiecewiseRate] = {}
+
+    def lane(tag: str, i: int) -> MigrationRequest:
+        src, dst = int(rng.integers(racks)), int(rng.integers(racks))
+        req = MigrationRequest(f"{tag}{i}", 0.0,
+                               float(rng.uniform(0.3e9, 2e9)),
+                               src=f"r{src}h0", dst=f"r{dst}h1")
+        rates[req.job_id] = PiecewiseRate(
+            [60.0, 120.0], [float(rng.uniform(0, 150e6)), 3e6],
+            offset=float(rng.uniform(0, 120)))
+        return req
+
+    for i in range(racks):
+        plane.launch(lane("bg", i), rates[f"bg{i}"], 0.0)
+    plane.advance(1.0)
+    cands = [lane("c", i) for i in range(n_cands)]
+    return plane, cands, rates
+
+
+def _trough_table(cands: Sequence[MigrationRequest], seed: int):
+    """Synthetic per-candidate troughs (half the burst is cyclic)."""
+    rng = np.random.default_rng(seed + 1)
+    table = {r.job_id: (float(rng.uniform(5.0, 120.0))
+                        if rng.random() < 0.5 else None)
+             for r in cands}
+    return lambda req, now: table[req.job_id]
+
+
+def latency_cell(n_cands: int = 64, racks: int = 4, seed: int = 0,
+                 reps: int = 3) -> Dict:
+    """One select() at ``n_cands`` candidates: horizon subset sweep vs
+    the myopic stacked prefix sweep. The acceptance bar is <= 2x."""
+    row: Dict = {"n_candidates": n_cands, "racks": racks}
+    for mode in ("myopic", "horizon"):
+        plane, cands, rates = _decision_case(n_cands, racks, seed)
+        ctl = AdaptiveConcurrencyController(
+            plane, rate_of=lambda r: rates[r.job_id],
+            horizon=(mode == "horizon"),
+            trough_of=_trough_table(cands, seed)
+            if mode == "horizon" else None)
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            ctl.select(list(cands), plane.now)
+            best = min(best, time.perf_counter() - t0)
+        row[f"{mode}_ms"] = round(best * 1e3, 3)
+    row["ratio"] = round(row["horizon_ms"] / max(row["myopic_ms"], 1e-9), 2)
+    row["within_2x"] = row["ratio"] <= 2.0
+    return row
+
+
+def parity_cell(seeds: Sequence[int] = range(6), n_cands: int = 24,
+                racks: int = 3) -> Dict:
+    """``horizon=False`` selections, stacked vs per-k reference — the
+    PR 8 bit-parity contract must survive the subset-sweep refactor."""
+    equal = []
+    for seed in seeds:
+        picks = {}
+        for mode in ("stacked", "reference"):
+            plane, cands, rates = _decision_case(n_cands, racks, seed)
+            ctl = AdaptiveConcurrencyController(
+                plane, rate_of=lambda r: rates[r.job_id], sweep=mode)
+            picks[mode] = [(r.job_id, r.path)
+                           for r in ctl.select(cands, plane.now)]
+        equal.append(picks["stacked"] == picks["reference"])
+    return {"seeds": len(list(seeds)), "n_candidates": n_cands,
+            "selections_bit_equal": all(equal)}
+
+
+def check(rows: Sequence[Dict], lat: Dict, par: Dict) -> Dict[str, bool]:
+    """The acceptance booleans (--quick criteria)."""
+    cyc = [r for r in rows if r["cyclic"]]
+    return {
+        "all_completed": all(r["all_completed"] for r in rows),
+        "horizon_le_myopic_everywhere": all(r["horizon_le_myopic"]
+                                            for r in rows),
+        "horizon_wins_cyclic": any(r["horizon_lt_myopic"] for r in cyc),
+        "horizon_latency_within_2x": bool(lat["within_2x"]),
+        "myopic_selection_parity": bool(par["selections_bit_equal"]),
+    }
+
+
+def run():
+    t0 = time.perf_counter()
+    rows = sweep()
+    lat = latency_cell()
+    par = parity_cell()
+    dt = time.perf_counter() - t0
+    crit = check(rows, lat, par)
+    gain = max((1 - r["horizon_bytes_GB"] / max(r["myopic_bytes_GB"], 1e-9))
+               for r in rows if r["cyclic"]) * 100
+    all_rows = list(rows) + [lat, par, {"criteria": crit}]
+    return [{"name": "horizon_sweep",
+             "us_per_call": round(dt * 1e6 / max(len(all_rows), 1), 1),
+             "derived": (f"le_everywhere={crit['horizon_le_myopic_everywhere']} "
+                         f"wins_cyclic={crit['horizon_wins_cyclic']} "
+                         f"best_cyclic_gain={gain:.1f}% "
+                         f"latency={lat['ratio']}x")}], all_rows
+
+
+if __name__ == "__main__":
+    summary, rows = run()
+    for r in rows:
+        print(r)
+    print(summary)

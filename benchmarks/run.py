@@ -31,6 +31,11 @@ detailed rows to experiments/bench/<name>.json.
     faster at 64 candidates, and the event-skipping FleetSim must be
     bit-identical to the per-second loop and >= 10x faster end-to-end on
     a sparse 1-hour plan (immediate policy);
+  * the receding-horizon admission smoke (horizon_sweep): horizon's
+    measured contended bytes <= the myopic controller's on every
+    load x fabric cell, strictly lower on >= 1 cyclic-load cell, one
+    horizon select() at 64 candidates <= 2x the myopic stacked sweep,
+    and horizon=False stacked-vs-reference selections bit-equal;
   * the fault-injection scenario smoke: an empty FaultPlan must be
     bit-identical to no plan at all, node_failure's RTO finite and
     bounded, host_drain's deadline met, and per-link bytes conserved
@@ -61,6 +66,7 @@ ALL = [
     "fabric_sweep",
     "controller_sweep",
     "controlplane_scaling",
+    "horizon_sweep",
     "scenarios_suite",
     "roofline",
 ]
@@ -82,7 +88,7 @@ BENCH_SCHEMAS = {
         "contended_8x_shared_link": dict, "plane_event_loop": dict,
         "fabric_sweep": list, "controller_sweep": list,
         "controlplane_scaling": dict, "route_sweep": dict,
-        "criteria": dict,
+        "horizon_sweep": dict, "criteria": dict,
     },
     "BENCH_scenarios.json": {
         "host_drain": dict, "node_failure": dict, "boot_storm": dict,
@@ -262,6 +268,16 @@ def quick_migration_plane() -> None:
     cps_sim = cps.fleetsim_cells(n_jobs=96)
     cps_crit = cps.check(cps_sweep, cps_sim)
 
+    # receding-horizon admission (ISSUE 9, reduced grid): horizon vs
+    # myopic on every load cell of the shared-link fabric, the 64-
+    # candidate decision-latency cell, and the horizon=False
+    # stacked-vs-reference parity cell
+    from benchmarks import horizon_sweep as hs
+    hs_rows = hs.sweep(fabrics=("shared_link",))
+    hs_lat = hs.latency_cell()
+    hs_par = hs.parity_cell()
+    hs_crit = hs.check(hs_rows, hs_lat, hs_par)
+
     payload = {
         "batch_vs_scalar_at_64": best,
         "sweep_timing": sweep_rows,
@@ -277,6 +293,10 @@ def quick_migration_plane() -> None:
         },
         "route_sweep": {
             "cells": route_rows, "latency": route_lat, "parity": route_par,
+        },
+        "horizon_sweep": {
+            "cells": hs_rows, "latency": hs_lat, "parity": hs_par,
+            "criteria": hs_crit,
         },
         "contended_8x_shared_link": {
             "immediate": {k: v for k, v in trad.items()
@@ -308,6 +328,13 @@ def quick_migration_plane() -> None:
             "route_aware_le_fixed": route_le,
             "route_aware_wins_oversubscribed": route_win,
             "route_latency_within_2x": route_lat["within_2x"],
+            "horizon_le_myopic_bytes": (
+                hs_crit["horizon_le_myopic_everywhere"]
+                and hs_crit["all_completed"]),
+            "horizon_wins_cyclic": hs_crit["horizon_wins_cyclic"],
+            "horizon_latency_within_2x":
+                hs_crit["horizon_latency_within_2x"],
+            "horizon_myopic_parity": hs_crit["myopic_selection_parity"],
         },
     }
     check_bench_schema("BENCH_table6.json", payload)
@@ -358,6 +385,15 @@ def quick_migration_plane() -> None:
         f"{route_rows}"
     assert route_lat["within_2x"], \
         f"stacked route sweep latency > 2x flat-fabric sweep: {route_lat}"
+    assert hs_crit["horizon_le_myopic_everywhere"] \
+        and hs_crit["all_completed"], \
+        f"receding-horizon moved more bytes than myopic: {hs_rows}"
+    assert hs_crit["horizon_wins_cyclic"], \
+        f"receding-horizon never strictly won a cyclic-load cell: {hs_rows}"
+    assert hs_crit["horizon_latency_within_2x"], \
+        f"horizon select() > 2x the myopic sweep at 64 candidates: {hs_lat}"
+    assert hs_crit["myopic_selection_parity"], \
+        f"horizon=False stacked-vs-reference selections diverged: {hs_par}"
     sweep64 = max(r["speedup"] for r in cps_sweep
                   if r["n_candidates"] == 64)
     skip_x = max(r["speedup"] for r in cps_sim
@@ -368,7 +404,8 @@ def quick_migration_plane() -> None:
           f"-{payload['contended_8x_shared_link']['traffic_reduction_pct']}%, "
           f"time -{payload['contended_8x_shared_link']['total_time_reduction_pct']}%, "
           f"controller<=static ok, defer-k sweep {sweep64}x@64, "
-          f"event-skip {skip_x}x")
+          f"event-skip {skip_x}x, horizon<=myopic ok "
+          f"(cyclic win, {hs_lat['ratio']}x@64)")
 
 
 def quick_scenarios() -> None:

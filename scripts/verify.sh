@@ -10,15 +10,25 @@
 # defer-k x route selections bit-equal to the per-pair reference,
 # route-aware bytes <= fixed-shortest-path on every cell and strictly
 # lower on an oversubscribed one, stacked route-sweep decision latency
-# within 2x of the flat-fabric sweep at 64 candidates x 4 routes — and
-# the fault-injection scenario smoke: empty-FaultPlan parity
-# bit-identical, node_failure RTO bounded, host_drain deadline met,
-# per-link bytes conserved across abort/retry).
+# within 2x of the flat-fabric sweep at 64 candidates x 4 routes — the
+# receding-horizon admission criteria (ISSUE 9, horizon_sweep): horizon
+# contended bytes <= the myopic controller's on every load x fabric
+# cell, strictly lower on >= 1 cyclic-load cell, horizon select() <= 2x
+# the myopic stacked sweep at 64 candidates, horizon=False
+# stacked-vs-reference selections bit-equal — and the fault-injection
+# scenario smoke: empty-FaultPlan parity bit-identical, node_failure RTO
+# bounded, host_drain deadline met, per-link bytes conserved across
+# abort/retry).
 #
 # Tier-1 pytest includes the ISSUE 8 fabric tests: tests/test_route_sweep.py
 # (pod_spine structure, link-id table parity, stacked pair pricing,
 # sparse masked solver, controller route parity) and
-# tests/test_route_failover.py (correlated uplink outage -> failover).
+# tests/test_route_failover.py (correlated uplink outage -> failover),
+# plus the ISSUE 9 receding-horizon tests: tests/test_horizon.py
+# (ResumeState fresh-init bit-parity and mid-round resume consistency,
+# subset-share solves, trough pricing, subset <= queue-prefix scores,
+# overtake-aging no-starvation, LMCM trough wakes vs event-skip, and
+# horizon=False byte-parity with the myopic controller).
 #
 # After tier-1, the sharded-decide-plane parity tests are re-run in a
 # SEPARATE pytest process with XLA_FLAGS forcing 2 virtual CPU devices

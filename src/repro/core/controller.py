@@ -84,10 +84,31 @@ sweeps prefixes over the ASSIGNED paths exactly as on a flat fabric, and
 launching requests get their route stamped on ``req.path``. The per-pair
 loop is kept verbatim inside ``sweep="reference"`` — identical (k, route)
 selections are asserted by tests/test_route_sweep.py.
+
+``horizon=True`` grows the sweep a third axis: **now vs trough**. The
+myopic sweep prices deferral at one fixed re-evaluation delay and only
+over queue-order prefixes; the receding-horizon sweep (a) prices each
+candidate's deferral at its own predicted workload trough (Algorithm 2's
+RemainTime through ``trough_of`` — the paper's postponement becomes a
+COLUMN of the admission score instead of an upstream verdict), (b) scores
+arbitrary candidate subsets — queue-order prefixes plus benefit-order
+prefixes, so a disjoint cheap-now candidate cannot starve behind a
+cross-rack-glued head — through ``plane.what_if_subset_shares``, and (c)
+bills the marginal dilution of already-running lanes by resuming their
+mid-round state (``plane.lane_state`` -> ``strunk.ResumeState``) under
+each scenario's shares. Deferred candidates carry their trough wake in
+``deferred_until`` (the LMCM turns it into a heap re-admission so
+event-skip stops there) and their would-be links in claims that seed
+route tie de-confliction. Progress is explicit: a candidate OVERTAKEN
+``aging_limit`` times (a later-queued candidate launched past it while it
+deferred — the one starvation mode subset reordering introduces; plain
+queue-order waiting does not age) is promoted to forced.
+``horizon=False`` (default) leaves every myopic code path byte-identical
+to PR 8.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -135,6 +156,15 @@ class AdaptiveConcurrencyController:
     the executable spec and as the honest baseline the
     ``controlplane_scaling`` benchmark times the stacked path against.
     Both select the same k with the same score tuple.
+
+    ``horizon=True`` switches to the receding-horizon subset sweep (see
+    module docstring): per-candidate trough-priced deferral via
+    ``trough_of(req, now) -> seconds-until-trough | None``, subset
+    selection over queue- and benefit-order prefixes, in-flight lane
+    repricing, trough wakes in ``deferred_until`` (consumed by the LMCM's
+    deferral push), and a hard no-starvation bound — a candidate overtaken
+    ``aging_limit`` times by later-queued launches is promoted to a
+    forced launch.
     """
 
     def __init__(self, plane, *,
@@ -142,7 +172,11 @@ class AdaptiveConcurrencyController:
                  path_of: Optional[Callable[[object], Tuple[str, ...]]] = None,
                  routes_of: Optional[Callable[
                      [object], Tuple[Tuple[str, ...], ...]]] = None,
-                 defer_s: float = 1.0, sweep: str = "stacked"):
+                 defer_s: float = 1.0, sweep: str = "stacked",
+                 horizon: bool = False,
+                 trough_of: Optional[Callable[
+                     [object, float], Optional[float]]] = None,
+                 aging_limit: int = 8):
         assert sweep in ("stacked", "reference")
         self.plane = plane
         self.rate_of = rate_of or (lambda req: None)
@@ -156,6 +190,18 @@ class AdaptiveConcurrencyController:
             self.routes_of = _default_routes_of(plane)
         self.defer_s = defer_s
         self.sweep = sweep
+        self.horizon = bool(horizon)
+        self.trough_of = trough_of
+        self.aging_limit = int(aging_limit)
+        # id(req) -> absolute wake time of the most recent horizon
+        # deferral (rebuilt every select; the LMCM consumes it to push
+        # trough-timed re-admissions into its heap)
+        self.deferred_until: Dict[int, float] = {}
+        # id(req) -> (wake, path): links a horizon-deferred candidate is
+        # about to take — counted as live by route tie de-confliction
+        # until the wake passes or the request launches. Never populated
+        # with horizon=False (bit-parity with the PR 8 assignment).
+        self._deferred_claims: Dict[int, Tuple[float, Tuple[str, ...]]] = {}
 
     # -- selection -----------------------------------------------------------
     def select(self, candidates: Sequence, now: float, *,
@@ -173,15 +219,37 @@ class AdaptiveConcurrencyController:
         assigned route stamped on ``req.path`` so the execution plane
         rides it; deferred candidates stay unstamped and are re-routed at
         the next boundary. Single-route components skip the route stage —
-        flat fabrics behave exactly as before."""
+        flat fabrics behave exactly as before.
+
+        With ``horizon=True`` the per-component decision is the subset
+        sweep (``_sweep_subset``): chosen candidates need not be a queue
+        prefix, deferred candidates get trough wakes in
+        ``deferred_until`` plus link claims for route de-confliction, and
+        candidates overtaken ``aging_limit`` times are promoted to forced
+        launches before the sweep (no starvation)."""
+        aged: List = []
+        if self.horizon:
+            self._prune_claims(now)
+            self.deferred_until = {}
+            aged = [r for r in candidates
+                    if getattr(r, "defers", 0) >= self.aging_limit]
+            if aged:
+                aged_ids = {id(r) for r in aged}
+                forced = list(forced) + aged
+                candidates = [r for r in candidates
+                              if id(r) not in aged_ids]
+                for r in aged:
+                    self._deferred_claims.pop(id(r), None)
         if not candidates:
-            return []
+            return aged
         cand_routes = [self.routes_of(r) for r in candidates]
         forced_routes = [self.routes_of(r) for r in forced]
         cand_links = [tuple(l for p in rs for l in p) for rs in cand_routes]
         forced_links = [tuple(l for p in rs for l in p)
                         for rs in forced_routes]
-        chosen: List = []
+        chosen: List = list(aged)    # aged launch regardless, so they must
+        # be RETURNED (membership in the chosen set is what the LMCM acts
+        # on); they also contend as forced lanes in every what-if above
         for idxs, busy, f_idx in self._components(cand_links, forced_links):
             group = [candidates[i] for i in idxs]
             g_routes = [cand_routes[i] for i in idxs]
@@ -194,16 +262,57 @@ class AdaptiveConcurrencyController:
             else:
                 g_fpaths, g_paths = self._route_stage(
                     g_forced, g_froutes, group, g_routes, now)
-            k = self._best_k(group, g_paths, g_forced, g_fpaths, now)
-            if k == 0 and not busy and not g_forced:
-                k = 1        # idle domain: always release the head of line
+            if self.horizon:
+                sel, delays, troughy = self._sweep_subset(
+                    group, g_paths, g_forced, g_fpaths, now)
+                if not sel and not busy and not g_forced \
+                        and not troughy.all():
+                    # idle domain with no predicted trough to wait for:
+                    # release the head of line (when EVERY candidate has a
+                    # trough wake scheduled, waiting IS the decision — the
+                    # aging bound and the max-wait wall still guarantee
+                    # progress)
+                    sel = [0]
+            else:
+                k = self._best_k(group, g_paths, g_forced, g_fpaths, now)
+                if k == 0 and not busy and not g_forced:
+                    k = 1    # idle domain: always release the head of line
+                sel = list(range(k))
             if multi:        # stamp assigned routes on what launches NOW
                 for r, p in zip(g_forced, g_fpaths):
                     r.path = p
-                for r, p in zip(group[:k], g_paths[:k]):
-                    r.path = p
-            chosen.extend(group[:k])
+                for j in sel:
+                    group[j].path = g_paths[j]
+            chosen.extend(group[j] for j in sel)
+            if self.horizon:
+                sel_set = set(sel)
+                # aging counts OVERTAKES, not waiting: a deferred candidate
+                # ages only when a later-queued candidate launched past it
+                # (the starvation mode subset reordering introduces).
+                # Queue-order waiting behind a draining head is the myopic
+                # schedule, not starvation, and must not trip the bound.
+                overtake = max(sel) if sel else -1
+                for j, r in enumerate(group):
+                    if j in sel_set:
+                        self._deferred_claims.pop(id(r), None)
+                    else:
+                        if j < overtake:
+                            r.defers = getattr(r, "defers", 0) + 1
+                        wake = now + float(delays[j])
+                        self.deferred_until[id(r)] = wake
+                        self._deferred_claims[id(r)] = (wake, g_paths[j])
+                for r in g_forced:
+                    self._deferred_claims.pop(id(r), None)
         return chosen
+
+    def _prune_claims(self, now: float) -> None:
+        """Drop deferred-link claims whose wake has passed — the claim
+        either re-enters this very select() as a live candidate or the
+        request is gone (launched elsewhere, cancelled, expired)."""
+        dead = [k for k, (wake, _) in self._deferred_claims.items()
+                if wake <= now]
+        for k in dead:
+            del self._deferred_claims[k]
 
     # -- the route stage (stage A of defer-k x route) ------------------------
     def _route_stage(self, forced: Sequence,
@@ -265,8 +374,14 @@ class AdaptiveConcurrencyController:
         plus earlier assignments — then toward the lowest route index
         (= the fixed-shortest path). Shared by both sweep engines, so
         stacked-vs-reference assignment parity reduces to share/cost
-        parity of the pair pricing."""
+        parity of the pair pricing. Horizon-deferred candidates' claimed
+        links count as live too: they will take those links at their
+        trough wake, so spreading must not collapse onto them (the claim
+        dict is empty with ``horizon=False`` — PR 8 bit-parity)."""
         claimed = dict(self.plane.link_live_counts())
+        for _wake, p in self._deferred_claims.values():
+            for l in dict.fromkeys(p):
+                claimed[l] = claimed.get(l, 0) + 1
         assigned: List[Tuple[str, ...]] = []
         j = 0
         for rs in routes:
@@ -438,3 +553,149 @@ class AdaptiveConcurrencyController:
             if best is None or score < best[0]:
                 best = (score, k)
         return best[1], best[0]
+
+    # -- the receding-horizon subset sweep (horizon=True) --------------------
+    def _score_subsets(self, group: Sequence,
+                       paths: Sequence[Tuple[str, ...]], forced: Sequence,
+                       forced_paths: Sequence[Tuple[str, ...]], now: float):
+        """Score every scenario subset of the receding-horizon sweep over
+        one component. Returns ``(subsets, scores, delays, troughy)``:
+        the candidate-index subsets evaluated (queue-order prefixes first,
+        then benefit-order prefixes, deduped), their (bytes, time, -count)
+        scores, the per-candidate deferral delay (seconds until the
+        predicted trough, floored at ``defer_s``), and which candidates
+        actually have a trough prediction.
+
+        Scenario i's bill = marginal resume cost of every in-flight lane
+        of the component (``plane.lane_state`` -> ``strunk.ResumeState``)
+        + the forced launches + the selected candidates, all at row i's
+        shares from ONE ``what_if_subset_shares`` solve and ONE flattened
+        resumable cost batch, + each deferred candidate priced at its own
+        trough ``now + delays[j]`` at uncontended capacity. Queue prefixes
+        are always among the scenarios, so the winning score can never
+        exceed the myopic defer-k ladder's on the same inputs (the
+        subset <= prefix property test reads exactly this invariant)."""
+        from repro.core.rates import RateBank
+        n, n_f = len(group), len(forced)
+        v = np.asarray([r.v_bytes for r in group], np.float64)
+        specs = [self.rate_of(r) for r in group]
+        v_forced = np.asarray([r.v_bytes for r in forced], np.float64)
+        specs_forced = [self.rate_of(r) for r in forced]
+        idle_bw = np.asarray(
+            [self.plane.path_capacity(r.src, r.dst) for r in group])
+        delays = np.full(n, float(self.defer_s))
+        troughy = np.zeros(n, bool)
+        if self.trough_of is not None:
+            for j, r in enumerate(group):
+                d = self.trough_of(r, now)
+                if d is not None and np.isfinite(d):
+                    delays[j] = max(float(self.defer_s), float(d))
+                    troughy[j] = True
+        bank_c = RateBank(specs)
+        two = np.concatenate([np.arange(n), np.arange(n)])
+        # one batch prices every candidate twice at uncontended capacity:
+        # launched alone NOW (the benefit-ordering key) and deferred to
+        # its own trough T+delta (the per-candidate deferred tail —
+        # deliberately optimistic, same bias as the myopic sweep)
+        both = strunk.what_if_cost_batch(
+            np.concatenate([v, v]), np.concatenate([idle_bw, idle_bw]),
+            bank_c.take(two) if not bank_c.fallback else specs + specs,
+            np.concatenate([np.full(n, now), now + delays]), full=True)
+        alone_bytes = both.bytes_sent[:n]
+        d_bytes = both.bytes_sent[n:]
+        d_time = both.total_time[n:]
+        # in-flight lanes of this component, aligned 1:1 with the base
+        # columns of the subset solve (same link set -> same domains in
+        # the same creation order)
+        links = {l for p in list(forced_paths) + list(paths) for l in p}
+        lanes = self.plane.lane_state(links) if links else []
+        n_b = len(lanes)
+        orders = [(list(range(n)), range(n + 1))]
+        if n > 1:
+            # benefit order: most launch-now gain first (ties: queue
+            # order). At large n the ladder is strided — the queue ladder
+            # stays complete (the subset <= prefix guarantee needs only
+            # it), so thinning the benefit rows trades a little selection
+            # resolution for half the scenario rows at 64+ candidates.
+            gain = alone_bytes - d_bytes
+            bo = sorted(range(n), key=lambda j: (gain[j], j))
+            orders.append(
+                (bo, range(1, n + 1) if n <= 32 else range(1, n, 2)))
+        subsets: List[Tuple[int, ...]] = []
+        seen = set()
+        for o, ks in orders:
+            for k in ks:
+                s = tuple(sorted(o[:k]))
+                if s not in seen:
+                    seen.add(s)
+                    subsets.append(s)
+        masks = np.zeros((len(subsets), n), bool)
+        for i, s in enumerate(subsets):
+            masks[i, list(s)] = True
+        shares = self.plane.what_if_subset_shares(forced_paths, paths,
+                                                  masks)
+        # flattened (scenario, entry) cost batch over the unified entry
+        # axis [in-flight lanes | forced | candidates]: every row carries
+        # all base+forced entries plus its mask's candidates (row order
+        # within the flat axis is irrelevant — totals are bincount sums)
+        k_n = len(subsets)
+        n_bf = n_b + n_f
+        rows_c, cols_c = np.nonzero(masks)
+        flat_entry = np.concatenate(
+            [np.tile(np.arange(n_bf, dtype=np.intp), k_n),
+             n_bf + cols_c.astype(np.intp)])
+        flat_row = np.concatenate(
+            [np.repeat(np.arange(k_n, dtype=np.intp), n_bf),
+             rows_c.astype(np.intp)])
+        v_all = np.concatenate(
+            [np.asarray([s.v for s in lanes], np.float64), v_forced, v])
+        specs_all = [s.spec for s in lanes] + specs_forced + specs
+        zf = np.zeros(n_f + n)
+        init = strunk.ResumeState(
+            rem=np.concatenate(
+                [np.asarray([s.rem for s in lanes], np.float64),
+                 v_forced, v]),
+            acc=np.concatenate(
+                [np.asarray([s.acc for s in lanes], np.float64), zf]),
+            sent=np.concatenate(
+                [np.asarray([s.sent for s in lanes], np.float64), zf]),
+            rounds=np.concatenate(
+                [np.asarray([s.rounds for s in lanes], np.int64),
+                 np.zeros(n_f + n, np.int64)]),
+            stopped=np.concatenate(
+                [np.asarray([s.stopped for s in lanes], bool),
+                 np.zeros(n_f + n, bool)]),
+            reason=np.concatenate(
+                [np.asarray([s.reason for s in lanes], np.int64),
+                 np.full(n_f + n, strunk.REASON_MAX_ROUNDS, np.int64)])
+        ).take(flat_entry)
+        bank = RateBank(specs_all)
+        rate_arg = bank.take(flat_entry) if not bank.fallback \
+            else [specs_all[i] for i in flat_entry]
+        priced = strunk.what_if_cost_batch(
+            v_all[flat_entry], shares[flat_row, flat_entry], rate_arg,
+            np.full(len(flat_entry), now), init=init, full=True)
+        row_bytes = np.bincount(flat_row, weights=priced.bytes_sent,
+                                minlength=k_n)
+        row_time = np.bincount(flat_row, weights=priced.total_time,
+                               minlength=k_n)
+        tail_b = d_bytes.sum() - masks @ d_bytes
+        tail_t = d_time.sum() - masks @ d_time
+        scores = [(float(row_bytes[i] + tail_b[i]),
+                   float(row_time[i] + tail_t[i]), -len(s))
+                  for i, s in enumerate(subsets)]
+        return subsets, scores, delays, troughy
+
+    def _sweep_subset(self, group: Sequence,
+                      paths: Sequence[Tuple[str, ...]], forced: Sequence,
+                      forced_paths: Sequence[Tuple[str, ...]], now: float
+                      ) -> Tuple[List[int], np.ndarray, np.ndarray]:
+        """Pick the minimal-score scenario subset (ties resolve to the
+        earliest-listed subset — queue-order prefixes come first, so an
+        exact tie keeps the myopic choice). Returns (sorted candidate
+        indexes to launch now, per-candidate deferral delays, trough
+        availability mask)."""
+        subsets, scores, delays, troughy = self._score_subsets(
+            group, paths, forced, forced_paths, now)
+        best = min(range(len(subsets)), key=lambda i: scores[i])
+        return list(subsets[best]), delays, troughy

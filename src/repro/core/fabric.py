@@ -236,6 +236,34 @@ class ShardedPlane:
         return network.what_if_pair_shares(
             base, fixed_paths, pair_paths, self.caps, self._fallback_bw)
 
+    def what_if_subset_shares(self, fixed_paths: Sequence[Sequence[str]],
+                              cand_paths: Sequence[Sequence[str]],
+                              masks) -> np.ndarray:
+        """Fair shares of K arbitrary candidate subsets against the
+        domains the sweep intersects, base columns INCLUDED (row k: every
+        intersecting in-flight lane + every fixed lane + the candidates
+        ``masks[k]`` selects). Base-column order is ``_base_paths`` over
+        the fixed+candidate links — the same order ``lane_state`` returns
+        snapshots in, so the controller can reprice lane j at column j.
+        See ``network.what_if_subset_shares``."""
+        base = self._base_paths(
+            l for paths in (fixed_paths, cand_paths) for p in paths
+            for l in p)
+        return network.what_if_subset_shares(
+            base, fixed_paths, cand_paths, masks, self.caps,
+            self._fallback_bw)
+
+    def lane_state(self, links=None):
+        """Mid-round snapshots of every lane in the domains touching
+        ``links`` (all domains when None) — aligned one-to-one with
+        ``_base_paths(links)``, i.e. with the base columns of
+        ``what_if_subset_shares`` over the same link set."""
+        if links is None:
+            hits = self._domains
+        else:
+            hits = self._hit_domains(links)
+        return [s for d in hits for s in d.lane_state()]
+
     def path_capacity(self, src: str, dst: str) -> float:
         """Uncontended capacity of the src->dst path (tightest link a lone
         migration would traverse) — the launch gate's floor reference."""

@@ -202,6 +202,7 @@ class FleetSim:
                  min_share_frac: float = 0.0,
                  core_oversubscription: float = 1.0,
                  adaptive_concurrency: bool = False,
+                 horizon: bool = False,
                  event_skip: bool = True,
                  route_aware: bool = False,
                  fault_plan=None, evacuate_on_fail: bool = True,
@@ -267,18 +268,31 @@ class FleetSim:
         # while nothing is down, so wiring it unconditionally preserves
         # the no-fault paths bit-for-bit
         self.lmcm.retarget = self._retarget_request
-        if adaptive_concurrency:
+        if adaptive_concurrency or horizon:
             # replace the static share-floor gate with the adaptive
             # concurrency controller: defer-k sweeps per migration domain
             # over the fabric's what-if probes (min_share_frac remains the
-            # fallback policy when the controller is off)
+            # fallback policy when the controller is off). ``horizon``
+            # upgrades the sweep to receding-horizon admission: the
+            # controller also prices "launch at the predicted cycle
+            # trough" columns read from the surveillance engine's fits,
+            # reprices already-in-flight lanes, and publishes per-request
+            # wake times that LMCM._defer_wake turns into exact heap
+            # boundaries (so event-skip never jumps a re-admission).
             from repro.core.controller import AdaptiveConcurrencyController
             self.lmcm.controller = AdaptiveConcurrencyController(
                 self.plane,
                 rate_of=lambda req: (
                     self.jobs[req.job_id].trace.rate_table
                     if req.job_id in self.jobs else None),
-                defer_s=sample_period)
+                defer_s=sample_period,
+                horizon=horizon,
+                trough_of=self._trough_of if horizon else None)
+            if horizon:
+                # horizon admission reads cycle fits even under
+                # policy="immediate" — keep the engine ticking and its
+                # refresh boundaries visible to the event-skip paths
+                self.lmcm.force_surveillance = True
         self.dt = sample_period
         self.now = 0.0
         # adopt jobs constructed with a default (empty) buffer into the
@@ -576,6 +590,16 @@ class FleetSim:
         if self.placement is not None and not req.src:
             req.src = self.placement.host_of(req.job_id) or ""
         req.path = self.topology.path(req.src, req.dst)
+
+    def _trough_of(self, req: MigrationRequest,
+                   now: float) -> Optional[float]:
+        """Controller ``trough_of`` hook: Alg. 2 RemainTime to the job's
+        next predicted cycle trough, in seconds (None when the job has no
+        cyclic fit — the controller then prices the plain one-period
+        defer instead)."""
+        remain = self.lmcm.engine.next_trough(
+            [req.job_id], int(now / self.dt)).get(req.job_id)
+        return None if remain is None else float(remain) * self.dt
 
     def _skip_idle_steps(self, pending: Sequence[MigrationRequest],
                          t_end: float) -> None:

@@ -669,6 +669,41 @@ def what_if_prefix_shares(base_paths: Sequence[Sequence[str]],
     return np.where(np.isfinite(shares), shares, fallback_bw)
 
 
+def what_if_subset_shares(base_paths: Sequence[Sequence[str]],
+                          fixed_paths: Sequence[Sequence[str]],
+                          cand_paths: Sequence[Sequence[str]],
+                          masks, capacities: Dict[str, float],
+                          fallback_bw: float) -> np.ndarray:
+    """Fair shares of K arbitrary candidate subsets in one stacked solve,
+    base columns INCLUDED.
+
+    Row k of the returned (K, B + F + n) array holds the max-min shares of
+    every ``base_paths`` lane (already in flight), every ``fixed_paths``
+    lane, and the ``cand_paths`` lanes selected by ``masks[k]`` — i.e. the
+    answer of ``fair_share(base + fixed + [cand[j] for j in masks[k]])``,
+    K scenarios over ONE (L, M) incidence. The receding-horizon admission
+    sweep needs both generalizations over ``what_if_prefix_shares``: the
+    kept base columns let it reprice mid-flight lanes under each
+    hypothetical admission, and arbitrary masks price non-prefix subsets
+    (queue-order AND benefit-order prefixes in one call). Active lanes
+    crossing no link get ``fallback_bw``; inactive columns read 0.
+    """
+    masks = np.asarray(masks, bool)
+    k_n, n = masks.shape
+    paths = ([tuple(p) for p in base_paths]
+             + [tuple(p) for p in fixed_paths]
+             + [tuple(p) for p in cand_paths])
+    if len(cand_paths) != n:
+        raise ValueError(f"{n}-wide masks for {len(cand_paths)} candidates")
+    n_bf = len(base_paths) + len(fixed_paths)
+    if not paths:
+        return np.zeros((k_n, 0))
+    inc, caps_vec, _, _ = build_incidence(paths, capacities)
+    active = np.concatenate([np.ones((k_n, n_bf), bool), masks], axis=1)
+    shares = fair_share_masked(inc, caps_vec, active)
+    return np.where(np.isfinite(shares), shares, fallback_bw)
+
+
 def pair_active_mask(n_base: int, n_fixed: int, n_pairs: int) -> np.ndarray:
     """The (n_pairs, n_base + n_fixed + n_pairs) scenario mask of the
     route sweep: row j activates every base/fixed lane plus exactly pair

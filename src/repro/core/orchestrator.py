@@ -92,6 +92,10 @@ class MigrationRequest:
     # no cycle left to time against) bypass policy postponement at submit
     # and at the release boundary — concurrency control still applies
     urgent: bool = False
+    # consecutive controller deferrals (receding-horizon admission): the
+    # controller promotes a request to a forced launch once this reaches
+    # its aging bound, so subset selection can never starve a candidate
+    defers: int = 0
     # generation of this request's LIVE heap entry: cancel+resubmit leaves
     # the old entry in the heap, and decision alone cannot tell the stale
     # entry from the live one (both say "scheduled") — ``due`` only honors
@@ -154,6 +158,11 @@ class LMCM:
         # then failed/cancelled instead of launched at a dead host
         self.retarget: Optional[
             Callable[[MigrationRequest], bool]] = None
+        # receding-horizon admission keeps reading cycle fits even under
+        # policy="immediate" (the controller prices launch-at-trough
+        # columns from the same fits); the simulator sets this so its
+        # event-skip keeps honoring surveillance refresh boundaries
+        self.force_surveillance = False
 
     @property
     def uses_surveillance(self) -> bool:
@@ -161,7 +170,7 @@ class LMCM:
         is the paper's no-surveillance baseline (Fig. 5a), so a
         simulator may skip its per-step engine ticks and staleness
         boundaries entirely."""
-        return self.policy != "immediate"
+        return self.policy != "immediate" or self.force_surveillance
 
     # -- registration --------------------------------------------------------
     def register_job(self, job_id: str, telemetry: TelemetryBuffer,
@@ -395,11 +404,28 @@ class LMCM:
             ready.append(req)
         out, deferred = self._admit(ready, now)
         for req in deferred:
-            self._push(req, now + self.sample_period)
+            self._push(req, self._defer_wake(req, now))
         for req in out:
             req.decision = "running"
         self.running.extend(out)
         return out
+
+    def _defer_wake(self, req: MigrationRequest, now: float) -> float:
+        """Fire time for a controller-deferred request. A receding-horizon
+        controller prices a specific wake (the predicted cycle trough) and
+        publishes it in ``deferred_until``; honoring it here keeps
+        ``next_due_time`` exact, so an event-skipping simulator stops at
+        the re-admission boundary instead of jumping it. Clamped to
+        ``max_wait`` so a far trough can never push a request past its
+        urgency wall (``_admit`` only defers requests that can still wait
+        at least one sampling period)."""
+        wake = now + self.sample_period
+        ctl = self.controller
+        if ctl is not None:
+            w = getattr(ctl, "deferred_until", {}).pop(id(req), None)
+            if w is not None:
+                wake = max(wake, float(w))
+        return min(wake, req.created_at + self.max_wait)
 
     def _admit(self, ready: List[MigrationRequest], now: float
                ) -> Tuple[List[MigrationRequest], List[MigrationRequest]]:

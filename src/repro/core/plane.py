@@ -67,6 +67,27 @@ class _LaneMeta:
     path_ids: Optional[np.ndarray] = None  # Topology.ids_of(path) fast view
 
 
+@dataclass
+class LaneState:
+    """Mid-round snapshot of one in-flight lane — one row of the
+    receding-horizon sweep's in-flight repricing input. ``sent`` counts
+    the bytes already charged to the lane's links (completed transfers
+    plus the progressed part of the current one, the same accounting the
+    abort path uses); the remaining fields map 1:1 onto
+    ``strunk.ResumeState`` so a what-if batch can resume the lane under
+    hypothetical fair shares."""
+    job_id: str
+    path: Tuple[str, ...]
+    spec: RateSpec
+    v: float
+    rem: float
+    acc: float
+    sent: float
+    rounds: int
+    stopped: bool
+    reason: int
+
+
 class MigrationPlane:
     """Event-driven executor for concurrent pre-copy migrations."""
 
@@ -231,6 +252,38 @@ class MigrationPlane:
         return network.what_if_pair_shares(
             [m.path for m in self._meta], fixed_paths, pair_paths,
             self.caps, self._fallback_bw)
+
+    def what_if_subset_shares(self, fixed_paths: Sequence[Sequence[str]],
+                              cand_paths: Sequence[Sequence[str]],
+                              masks) -> np.ndarray:
+        """Fair shares of K arbitrary candidate subsets in one stacked
+        solve, KEEPING the in-flight base columns: row k holds the shares
+        of every in-flight lane, every ``fixed_paths`` lane, and the
+        ``cand_paths`` lanes selected by ``masks[k]``. The receding-
+        horizon generalization of ``what_if_shares_sweep`` — base columns
+        let the sweep reprice mid-flight lanes per scenario (see
+        ``lane_state``), and arbitrary masks price non-prefix subsets."""
+        return network.what_if_subset_shares(
+            [m.path for m in self._meta], fixed_paths, cand_paths, masks,
+            self.caps, self._fallback_bw)
+
+    def lane_state(self, links=None) -> List[LaneState]:
+        """Per-lane mid-round snapshots in ``paths_in_flight`` order (the
+        base-column order of the what-if solves). ``links`` is accepted
+        for interface parity with ``fabric.ShardedPlane`` — a monolithic
+        plane is one domain, so every lane is returned regardless."""
+        out: List[LaneState] = []
+        for i, m in enumerate(self._meta):
+            out.append(LaneState(
+                job_id=m.req.job_id, path=m.path, spec=m.spec,
+                v=float(self._v[i]), rem=float(self._rem[i]),
+                acc=float(self._acc[i]),
+                sent=max(0.0, float(self._sent[i]
+                                    + (self._round[i] - self._rem[i]))),
+                rounds=int(self._rounds[i]),
+                stopped=bool(self._phase[i] == _STOP),
+                reason=int(self._reason[i])))
+        return out
 
     def path_capacity(self, src: str, dst: str) -> float:
         """Uncontended capacity of the src->dst path: the tightest link a

@@ -9,6 +9,14 @@ as a one-full-cycle backoff).
 
 A vectorized jit variant classifies a whole fleet in one call (used by the
 Fig. 10 scalability benchmark).
+
+Two consumers, one algorithm: the LMCM's per-request decide path calls
+``postpone`` directly (defer the request, re-decide at the trough), and the
+receding-horizon admission controller reads the same RemainTime through
+``SurveillanceEngine.next_trough`` — there it is a PRICE, not a verdict:
+"launch now" and "launch at the trough T+RemainTime" are two columns of one
+scored what-if batch, so Alg. 2's timing and the fabric's contention are
+weighed in the same currency (predicted bytes) instead of in sequence.
 """
 from __future__ import annotations
 

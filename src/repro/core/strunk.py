@@ -31,7 +31,7 @@ bit-equal to this module's.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Sequence, Tuple, Union
+from typing import Callable, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -92,6 +92,115 @@ class BatchMigrationOutcome:
             stop_reason=STOP_REASONS[int(self.stop_reason[i])])
 
 
+@dataclass
+class ResumeState:
+    """Mid-round initial state for (M,) lanes — the execution plane's
+    ``lane_state()`` snapshot in array form, or fresh rows (``fresh``)
+    for lanes not yet launched.
+
+    ``rem``      bytes left in the lane's current transfer: the in-flight
+                 round's remainder, or the stop-and-copy remnant when
+                 ``stopped``;
+    ``acc``      dirty bytes already accrued during the current round;
+    ``sent``     bytes already charged to the lane's links (completed
+                 rounds plus the progressed part of the current one) —
+                 feeds the 3xV total-transfer cap but NOT the returned
+                 bill;
+    ``rounds``   pre-copy rounds already completed;
+    ``stopped``  True once the lane has entered stop-and-copy;
+    ``reason``   stop-reason code carried through for already-stopped
+                 lanes (ignored for running ones).
+
+    Resumed outcomes are MARGINAL: ``bytes_sent`` / ``total_time`` cover
+    only the remaining work from ``start_time`` on, so a what-if sweep
+    bills the dilution a candidate batch inflicts on already-running
+    lanes as the resumed bill under the hypothetical shares.
+    """
+    rem: np.ndarray
+    acc: np.ndarray
+    sent: np.ndarray
+    rounds: np.ndarray
+    stopped: np.ndarray
+    reason: Optional[np.ndarray] = None
+
+    @staticmethod
+    def fresh(v_mem) -> "ResumeState":
+        """Launch-time state: round 0 copies all of V_mem, nothing accrued."""
+        v = np.atleast_1d(np.asarray(v_mem, np.float64))
+        m = v.shape[0]
+        return ResumeState(rem=v.copy(), acc=np.zeros(m), sent=np.zeros(m),
+                           rounds=np.zeros(m, np.int64),
+                           stopped=np.zeros(m, bool),
+                           reason=np.full(m, REASON_MAX_ROUNDS, np.int64))
+
+    def take(self, idx) -> "ResumeState":
+        """Gather rows ``idx`` (with repeats) — the flattened-sweep layout."""
+        idx = np.asarray(idx, np.intp)
+        return ResumeState(
+            rem=self.rem[idx], acc=self.acc[idx], sent=self.sent[idx],
+            rounds=self.rounds[idx], stopped=self.stopped[idx],
+            reason=None if self.reason is None else self.reason[idx])
+
+
+def _resume_precopy_batch(v, bw, rate, nonneg, t0, init: ResumeState,
+                          thresh, cap, max_rounds) -> BatchMigrationOutcome:
+    """Generalized pre-copy recurrence from arbitrary mid-round state.
+
+    Same math as the fresh-start hot loop, but per-lane round counters
+    (lanes resume at different depths) and a first-iteration dirty carry:
+    the first resumed round dirties ``acc + rate*dt`` because ``acc``
+    bytes accrued before the snapshot. For ``ResumeState.fresh`` inputs
+    this is value-identical to ``simulate_precopy_batch``'s own loop
+    (``0.0 + x == x`` and the op order matches), which
+    ``tests/test_horizon.py`` asserts bit-for-bit.
+    """
+    m = v.shape[0]
+    t = t0.astype(np.float64).copy()
+    sent = np.zeros(m)                       # marginal: future bytes only
+    charged = np.asarray(init.sent, np.float64) + np.zeros(m)
+    rounds = np.asarray(init.rounds, np.int64).copy()
+    if init.reason is not None:
+        reason = np.asarray(init.reason, np.int64).astype(np.int8).copy()
+    else:
+        reason = np.full(m, REASON_MAX_ROUNDS, np.int8)
+    stopped0 = np.asarray(init.stopped, bool)
+    rem0 = np.asarray(init.rem, np.float64) + np.zeros(m)
+    final = np.where(stopped0, rem0, 0.0)    # stop-and-copy payload
+    active = ~stopped0
+    work = np.where(active, rem0, 0.0)
+    carry = np.where(active, np.asarray(init.acc, np.float64), 0.0)
+    while active.any():
+        dt = work / bw
+        mid = t + 0.5 * dt
+        r = rate(mid, active)
+        grown = (np.asarray(r, np.float64) if nonneg
+                 else np.maximum(r, 0.0)) * dt
+        dirtied = np.minimum(carry + grown, v)
+        sent = sent + work
+        t = t + dt
+        rounds = rounds + active
+        # stop conditions, priority-ordered as the reference loop (the
+        # last copyto wins): dirty_low, then max_rounds, then total_cap
+        c_dirty = dirtied <= thresh
+        c_rounds = rounds >= max_rounds
+        c_total = (charged + sent) + dirtied > cap
+        stop = (c_dirty | c_rounds | c_total) & active
+        if stop.any():
+            np.copyto(reason, REASON_TOTAL_CAP, where=stop)
+            np.copyto(reason, REASON_MAX_ROUNDS, where=stop & c_rounds)
+            np.copyto(reason, REASON_DIRTY_LOW, where=stop & c_dirty)
+            np.copyto(final, dirtied, where=stop)
+            active = active & ~stop
+        work = dirtied * active              # zero stopped lanes exactly
+        carry = np.zeros(m)                  # the carry is spent in round 1
+    downtime = final / bw                    # stop-and-copy
+    sent = sent + final
+    t = t + downtime
+    return BatchMigrationOutcome(total_time=t - t0, downtime=downtime,
+                                 bytes_sent=sent, rounds=rounds,
+                                 stop_reason=reason.astype(np.int64))
+
+
 def batch_rate_fn(dirty_rate: BatchDirtyRate, m: int
                   ) -> Callable[[np.ndarray, np.ndarray], np.ndarray]:
     """Normalize a batch dirty-rate spec to ``f(t, active) -> rates``.
@@ -136,6 +245,7 @@ def simulate_precopy_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
                            max_rounds: int = XEN_MAX_ROUNDS,
                            stop_dirty_pages: int = XEN_STOP_DIRTY_PAGES,
                            stop_total_factor: float = XEN_STOP_TOTAL_FACTOR,
+                           init: Optional[ResumeState] = None,
                            ) -> BatchMigrationOutcome:
     """Vectorized pre-copy over (M,) lanes (paper §3.2 stages 2–3).
 
@@ -145,6 +255,12 @@ def simulate_precopy_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
     stop conditions applied as masks. Finished lanes freeze while the rest
     keep iterating, so one call simulates M migrations of arbitrary length
     in max(rounds) vector steps.
+
+    ``init`` resumes lanes from arbitrary mid-round state (the execution
+    plane's ``lane_state()`` snapshots) instead of launch: outcomes then
+    bill only the MARGINAL remaining bytes/time, which is how the
+    receding-horizon controller reprices in-flight lanes under
+    hypothetical candidate admissions.
     """
     v = np.atleast_1d(np.asarray(v_mem, np.float64))
     m = v.shape[0]
@@ -163,6 +279,11 @@ def simulate_precopy_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
     nonneg = bool(getattr(dirty_rate, "nonneg", False)) or (
         np.isscalar(dirty_rate) and not callable(dirty_rate)
         and float(dirty_rate) >= 0.0)
+    if init is not None:
+        return _resume_precopy_batch(
+            v, bw, rate, nonneg, t0, init,
+            float(stop_dirty_pages) * page, stop_total_factor * v,
+            max_rounds)
     t = t0.astype(np.float64).copy()
     sent = np.zeros(m)
     rounds = np.zeros(m, np.int64)
@@ -299,7 +420,8 @@ def expected_cost(v_mem: float, bandwidth: float, dirty_rate: DirtyRate,
 
 
 def expected_cost_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
-                        start_times, *, full: bool = False):
+                        start_times, *, full: bool = False,
+                        init: Optional[ResumeState] = None):
     """Vectorized expected migration cost (total bytes sent) over (M,)
     hypothetical lanes. Two callers, same math:
 
@@ -315,12 +437,13 @@ def expected_cost_batch(v_mem, bandwidth, dirty_rate: BatchDirtyRate,
     m = max(start.shape[0], np.atleast_1d(np.asarray(v_mem)).shape[0])
     out = simulate_precopy_batch(
         np.broadcast_to(np.asarray(v_mem, np.float64), (m,)), bandwidth,
-        dirty_rate, start_time=np.broadcast_to(start, (m,)))
+        dirty_rate, start_time=np.broadcast_to(start, (m,)), init=init)
     return out if full else out.bytes_sent
 
 
 def what_if_cost_batch(v_mem, bandwidth, rate_specs, start_times,
-                       *, full: bool = False):
+                       *, full: bool = False,
+                       init: Optional[ResumeState] = None):
     """``expected_cost_batch`` over (M,) *hypothetical* lanes whose dirty
     rates are given as lane-registration specs (``core/rates.py``: tables,
     constants, ``rate_table`` objects, plain callables, None) — or as an
@@ -347,7 +470,7 @@ def what_if_cost_batch(v_mem, bandwidth, rate_specs, start_times,
             raise ValueError("RateBank inputs must be fully tabular "
                              "(fallback callables need per-lane specs)")
         return expected_cost_batch(v_mem, bandwidth, bank.table_fn,
-                                   start_times, full=full)
+                                   start_times, full=full, init=init)
     specs = list(rate_specs)
     if not specs:
         return expected_cost_batch(np.zeros(0), bandwidth, 0.0,
@@ -360,4 +483,4 @@ def what_if_cost_batch(v_mem, bandwidth, rate_specs, start_times,
         # the compatibility path (callables are sampled per lane)
         rate = [as_rate_table(s) or s for s in specs]
     return expected_cost_batch(v_mem, bandwidth, rate, start_times,
-                               full=full)
+                               full=full, init=init)

@@ -316,6 +316,26 @@ class SurveillanceEngine:
                                       origins, profiles, periods)
         return self._decide_cache
 
+    def next_trough(self, job_ids: List[str], now_step: int
+                    ) -> Dict[str, Optional[int]]:
+        """Samples until each job's next predicted LM trough — Algorithm
+        2's RemainTime read off the CURRENT cycle fits (no refit: admission
+        decisions ride whatever the last tick fitted, so pricing a
+        candidate does not perturb the surveillance schedule). ``None``
+        for unregistered jobs and for jobs without a cyclic model — there
+        is no trough to time against, and the receding-horizon controller
+        falls back to its myopic one-period deferral for them."""
+        out: Dict[str, Optional[int]] = {}
+        for jid in job_ids:
+            job = self.jobs.get(jid)
+            model = job.model if job is not None else None
+            if model is None or not model.cyclic:
+                out[jid] = None
+            else:
+                out[jid] = int(pp.postpone(
+                    model, int(now_step) - job.origin_step))
+        return out
+
     def tick(self, now_step: int) -> TickResult:
         """One fleet surveillance tick: refresh every stale cycle fit, then
         answer Algorithm 2 for the whole fleet in one vectorized call.
