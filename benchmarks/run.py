@@ -39,7 +39,12 @@ detailed rows to experiments/bench/<name>.json.
   * the fault-injection scenario smoke: an empty FaultPlan must be
     bit-identical to no plan at all, node_failure's RTO finite and
     bounded, host_drain's deadline met, and per-link bytes conserved
-    across abort -> retry (BENCH_scenarios.json).
+    across abort -> retry (BENCH_scenarios.json);
+  * the prediction-guard smoke (guard_suite): on drifting loads whose
+    admission-time fit is wrong by construction, the guarded arm must
+    waste strictly fewer bytes than unguarded on the drifting lanes of
+    every cell, meet >= as many downtime/deadline SLAs, and recover
+    aborted lanes within the horizon (BENCH_scenarios.json).
 
 Both emit their JSON at the repo root for the cross-PR perf trajectory,
 schema-checked first (``check_bench_schema``) so a silently renamed key
@@ -68,6 +73,7 @@ ALL = [
     "controlplane_scaling",
     "horizon_sweep",
     "scenarios_suite",
+    "guard_suite",
     "roofline",
 ]
 
@@ -93,7 +99,7 @@ BENCH_SCHEMAS = {
     "BENCH_scenarios.json": {
         "host_drain": dict, "node_failure": dict, "boot_storm": dict,
         "rolling_upgrade": dict, "empty_plan_parity": dict,
-        "conservation": dict, "criteria": dict,
+        "conservation": dict, "guard_suite": dict, "criteria": dict,
     },
 }
 
@@ -411,10 +417,13 @@ def quick_migration_plane() -> None:
 def quick_scenarios() -> None:
     """Fault-injection scenario smoke: empty-FaultPlan parity must be
     bit-identical, node_failure RTO finite and bounded, host_drain's
-    deadline met, and per-link byte conservation must hold across
-    abort -> retry (BENCH_scenarios.json)."""
+    deadline met, per-link byte conservation must hold across
+    abort -> retry, and the prediction guard must strictly reduce
+    wasted bytes on drifting loads while meeting >= as many SLAs
+    (BENCH_scenarios.json)."""
     import numpy as np
 
+    from benchmarks import guard_suite as gs
     from benchmarks import scenarios_suite as ss
     from repro.scenarios.suite import SCENARIOS
 
@@ -429,6 +438,11 @@ def quick_scenarios() -> None:
     roll = SCENARIOS["rolling_upgrade"](policy="immediate", seed=0)
     rto_ok = (np.isfinite(nf["rto_s"]) and 0.0 < nf["rto_s"]
               <= ss.RTO_BOUND_S and not nf["failed_jobs"])
+    # prediction-guard acceptance (ISSUE 10): guarded vs unguarded arms
+    # on drifting loads where the admission-time fit is wrong by
+    # construction
+    guard_rows = gs.sweep()
+    guard_crit = gs.check(guard_rows)
     payload = {
         "host_drain": drain,
         "node_failure": nf,
@@ -436,6 +450,7 @@ def quick_scenarios() -> None:
         "rolling_upgrade": roll,
         "empty_plan_parity": parity,
         "conservation": cons,
+        "guard_suite": {"rows": guard_rows, "criteria": guard_crit},
         "criteria": {
             "empty_plan_parity": parity["identical"],
             "node_failure_rto_bounded": rto_ok,
@@ -444,6 +459,12 @@ def quick_scenarios() -> None:
             "boot_storm_all_completed":
                 storm["completed"] == storm["requested"],
             "rolling_upgrade_all_drained": roll["all_drained"],
+            "guard_fewer_wasted_bytes":
+                guard_crit["guarded_fewer_wasted_bytes"],
+            "guard_sla_no_worse": guard_crit["guarded_sla_no_worse"],
+            "guard_recovery_bounded": (
+                guard_crit["recovery_bounded"]
+                and guard_crit["all_guarded_completed"]),
         },
     }
     check_bench_schema("BENCH_scenarios.json", payload)
@@ -459,10 +480,19 @@ def quick_scenarios() -> None:
         f"host_drain missed its deadline: {drain}"
     assert cons["conserved"], \
         f"abort/retry byte conservation violated: {cons}"
+    assert guard_crit["guarded_fewer_wasted_bytes"], \
+        f"guard did not strictly reduce wasted bytes: {guard_rows}"
+    assert guard_crit["guarded_sla_no_worse"], \
+        f"guard met fewer SLAs than unguarded: {guard_rows}"
+    assert guard_crit["recovery_bounded"] \
+        and guard_crit["all_guarded_completed"], \
+        f"guarded recovery unbounded or lanes lost: {guard_rows}"
+    saved = sum(r["bytes_saved"] for r in guard_rows) / 1e9
     print(f"QUICK OK: parity bit-identical, RTO {nf['rto_s']:.1f}s "
           f"(<= {ss.RTO_BOUND_S:.0f}s), drain deadline met, "
           f"{cons['links_checked']} links conserve bytes across "
-          f"{cons['n_aborts']} aborts")
+          f"{cons['n_aborts']} aborts, guard saved {saved:.2f}GB "
+          f"on drifting loads")
 
 
 def main() -> None:

@@ -74,7 +74,23 @@ def power_spectrum(series: np.ndarray, use_kernel: Optional[bool] = None
     return _spectra(np.asarray(series, np.float32)[None], use_kernel)[0]
 
 
-def _peak_pick(P: np.ndarray, n: int, min_period: int, max_period: int
+# A near-constant window leaves only float rounding residue after mean
+# removal; relative to the raw signal power that residue is ~eps(f32)^2
+# (~1e-14). Real 0/1 classification series with any structure carry
+# DC-removed mass >= ~1e-2 of total power, so 1e-9 cleanly separates
+# "all noise floor" from "has a cycle to score".
+_DEGENERATE_MASS_FRAC = 1e-9
+
+
+def _total_power(X: np.ndarray) -> np.ndarray:
+    """(J, n) -> (J,) raw per-row signal power (DC included), the
+    reference scale for the degenerate-window confidence clamp."""
+    X = np.asarray(X, np.float64)
+    return (X * X).sum(axis=1)
+
+
+def _peak_pick(P: np.ndarray, n: int, min_period: int, max_period: int,
+               total_power: Optional[np.ndarray] = None
                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Fleet peak pick. P: (J, n//2+1) one-sided power. Returns
     (k_star (J,), confidence (J,), found (J,) bool)."""
@@ -89,7 +105,15 @@ def _peak_pick(P: np.ndarray, n: int, min_period: int, max_period: int
     found = Pv[rows, k_star] > 0
     # confidence: peak bin's share of the DC-removed one-sided spectral
     # mass — the single normalization shared by the scalar and batch paths
-    conf = P[rows, k_star] / np.maximum(P[:, 1:].sum(axis=1), 1e-12)
+    mass = P[:, 1:].sum(axis=1)
+    conf = P[rows, k_star] / np.maximum(mass, 1e-12)
+    if total_power is not None:
+        # degenerate-window clamp: when the whole DC-removed mass is float
+        # noise (mass hits the 1e-12 floor relative to raw power), the
+        # "peak share" is 1.0-of-nothing — report confidence 0 so gates on
+        # confidence fall back instead of trusting pure noise.
+        degen = mass <= _DEGENERATE_MASS_FRAC * np.asarray(total_power)
+        conf = np.where(degen, 0.0, conf)
     return k_star, conf, found
 
 
@@ -161,7 +185,8 @@ def cycle_length(series: np.ndarray, *, min_period: int = 2,
         return 0, 0.0
     max_p = min(max_period or n // 2, n // 2)
     P = _spectra(x[None], use_kernel)
-    k_star, conf, found = _peak_pick(P, n, min_period, max_p)
+    k_star, conf, found = _peak_pick(P, n, min_period, max_p,
+                                     total_power=_total_power(x[None]))
     if not found[0]:
         return 0, 0.0
     p0 = int(round(n / k_star[0]))
@@ -212,7 +237,8 @@ def fit_cycle_batch(classes_batch: np.ndarray, *, min_period: int = 2,
         return [CycleModel(0, 0.0, np.asarray(
             [1 if X[j].mean() >= 0.5 else 0], np.int8)) for j in range(J)]
     P = _spectra(X, use_kernel, mesh=mesh)
-    k_star, conf, found = _peak_pick(P, n, min_period, max_p)
+    k_star, conf, found = _peak_pick(P, n, min_period, max_p,
+                                     total_power=_total_power(X))
     p0 = np.round(n / np.maximum(k_star, 1)).astype(np.int64)
     periods = np.where(found, p0, 1)
     if found.any():

@@ -50,6 +50,7 @@ import numpy as np
 from repro.core import characterize, network, strunk
 from repro.core.consolidation import Placement
 from repro.core.fabric import ShardedPlane
+from repro.core.guard import MigrationGuard
 from repro.core.orchestrator import LMCM, MigrationRequest
 from repro.core.rates import PiecewiseRate  # noqa: F401  (re-export)
 from repro.core.telemetry import DEFAULT_FIELDS, FleetTelemetry, \
@@ -206,7 +207,9 @@ class FleetSim:
                  event_skip: bool = True,
                  route_aware: bool = False,
                  fault_plan=None, evacuate_on_fail: bool = True,
-                 retry_backoff_s: float = 4.0, retry_max: int = 3):
+                 retry_backoff_s: float = 4.0, retry_max: int = 3,
+                 retry_jitter: float = 0.0, retry_jitter_seed: int = 0,
+                 guard: Optional[MigrationGuard] = None):
         self.jobs = {j.job_id: j for j in jobs}
         self.rng = np.random.default_rng(seed)
         self.lmcm = LMCM(policy=policy, max_wait=max_wait,
@@ -214,7 +217,9 @@ class FleetSim:
                          sample_period=sample_period,
                          min_share_frac=min_share_frac,
                          retry_backoff_s=retry_backoff_s,
-                         retry_max=retry_max)
+                         retry_max=retry_max,
+                         retry_jitter=retry_jitter,
+                         retry_jitter_seed=retry_jitter_seed)
         # fault injection (scenarios/faults.py): events fire at the first
         # sampling boundary >= their t, as event boundaries the skip
         # paths never jump over. An EMPTY plan normalizes to None — by
@@ -248,7 +253,12 @@ class FleetSim:
                 topology = network.Topology.single_link(bandwidth)
         self.topology = topology
         self.placement = placement
-        self.plane = ShardedPlane(self.topology)
+        # prediction guard (core/guard.py): one shared watchdog instance
+        # plumbed into every migration domain's plane; None (the default)
+        # takes no guard code path anywhere — bit-identical to a
+        # guard-less build
+        self._guard = guard
+        self.plane = ShardedPlane(self.topology, guard=guard)
         # multi-route fabrics (Topology.pod_spine): re-pick each launch's
         # route greedily at its release boundary (best probed share, see
         # ShardedPlane.pick_route). Requests are still stamped with route
@@ -299,6 +309,12 @@ class FleetSim:
         # fleet SoA store; pre-filled custom buffers are kept as-is
         self.telemetry = FleetTelemetry(len(jobs), capacity=16384)
         self._job_list = list(jobs)
+        self._job_row = {j.job_id: i for i, j in enumerate(self._job_list)}
+        # job rows currently under a telemetry_blackout fault: their
+        # samples are overwritten with NaN AFTER the rng draw, so the
+        # stream (and every non-blacked-out value) is unchanged and the
+        # scalar/bulk recording paths stay bit-identical
+        self._blackout_rows: set = set()
         for idx, j in enumerate(self._job_list):
             if (len(j.telemetry) == 0
                     and tuple(j.telemetry.fields) == self.telemetry.fields):
@@ -345,11 +361,15 @@ class FleetSim:
             for i, j in enumerate(self._job_list):
                 s = j.trace.sample_indexes(self.now, self.rng)
                 vals[i] = [s[f] for f in self.telemetry.fields]
+            if self._blackout_rows:
+                vals[sorted(self._blackout_rows)] = np.nan
             self.telemetry.record_fleet(step, vals)
         else:
-            for j in self._job_list:
-                j.telemetry.record(step,
-                                   **j.trace.sample_indexes(self.now, self.rng))
+            for i, j in enumerate(self._job_list):
+                s = j.trace.sample_indexes(self.now, self.rng)
+                if i in self._blackout_rows:
+                    s = dict.fromkeys(s, float("nan"))
+                j.telemetry.record(step, **s)
 
     def _step_times(self, steps: int) -> np.ndarray:
         """The next ``steps``+1 clock values under the per-second loop's
@@ -413,6 +433,10 @@ class FleetSim:
         vals += 1.0
         vals *= base[np.arange(n_jobs)[None, :], idx]
         np.maximum(vals, 0.0, out=vals)
+        if self._blackout_rows:
+            # blackout membership is constant within a chunk: telemetry
+            # fault events are skip/bulk boundaries like any other fault
+            vals[:, sorted(self._blackout_rows), :] = np.nan
         self.telemetry.record_fleet_bulk(
             (times / self.dt).astype(np.int64), vals)
 
@@ -488,6 +512,12 @@ class FleetSim:
                 self.plane.set_link_capacity(ev.target, ev.capacity)
                 for req, outcome in self.plane.abort_link(ev.target):
                     self._handle_abort(req, outcome, now, launch_info)
+            elif ev.kind == "telemetry_blackout":
+                self._blackout_rows.update(
+                    self._job_row[j] for j in ev.jobs if j in self._job_row)
+            elif ev.kind == "telemetry_restore":
+                self._blackout_rows.difference_update(
+                    self._job_row[j] for j in ev.jobs if j in self._job_row)
             else:                        # link_degrade / link_restore
                 self.plane.set_link_capacity(ev.target, ev.capacity)
 
@@ -506,6 +536,41 @@ class FleetSim:
             self._retry_count += 1
         else:
             self._failed_jobs.append(req.job_id)
+
+    def _handle_guard_abort(self, req: MigrationRequest,
+                            outcome: strunk.MigrationOutcome, now: float,
+                            launch_info=None) -> None:
+        """A guard abort is misprediction feedback, not just a failed
+        lane: the fit that priced the launch was wrong, so force it
+        stale (refit at the next surveillance tick instead of waiting
+        out the staleness epoch) and decay the job's ``trust`` — which
+        gates the receding-horizon trough pricing through
+        ``MigrationGuard.trusts``. The lane itself then takes the normal
+        abort path (wasted-bytes log + ``LMCM.fail`` backoff)."""
+        sj = self.lmcm.engine.jobs.get(req.job_id)
+        if sj is not None:
+            sj.trust = self._guard.decay_trust(sj.trust)
+            if sj.fitted_step >= 0:
+                sj.fitted_step = -1
+                self.lmcm.engine._decide_cache = None
+                # the cached stale boundary assumed no forced refits
+                self._refresh_boundary = None
+        self._handle_abort(req, outcome, now, launch_info)
+
+    def _stamp_expectation(self, req: MigrationRequest,
+                           job: SimJob) -> None:
+        """Price the launch the guard will hold the lane to: the Strunk
+        cost at the fair share the fabric probes for one more lane on
+        the request's path, against the job's registered rate table.
+        This is the plane's own cost model under the launch-time state
+        of the world — divergence beyond it means contention, faults, or
+        throttle-resistant dirtying the admission price did not see."""
+        bw = self.plane.probe_bandwidth(req.src, req.dst, 1)
+        out = strunk.what_if_cost_batch(
+            [req.v_bytes], bw, [job.trace.rate_table], [self.now],
+            full=True)
+        req.expected_bytes = float(out.bytes_sent[0])
+        req.expected_time = float(out.total_time[0])
 
     def _live_hosts(self) -> List[str]:
         return [h for h in self.placement.hosts
@@ -596,7 +661,17 @@ class FleetSim:
         """Controller ``trough_of`` hook: Alg. 2 RemainTime to the job's
         next predicted cycle trough, in seconds (None when the job has no
         cyclic fit — the controller then prices the plain one-period
-        defer instead)."""
+        defer instead). With a guard wired, a fit whose
+        ``confidence x trust`` falls below the guard's gate is treated
+        as no fit at all: guard aborts burned the model's credibility,
+        so the controller falls back to myopic pricing until refits
+        re-earn it."""
+        if self._guard is not None:
+            sj = self.lmcm.engine.jobs.get(req.job_id)
+            if (sj is not None and sj.model is not None
+                    and not self._guard.trusts(sj.model.confidence,
+                                               sj.trust)):
+                return None
         remain = self.lmcm.engine.next_trough(
             [req.job_id], int(now / self.dt)).get(req.job_id)
         return None if remain is None else float(remain) * self.dt
@@ -713,6 +788,11 @@ class FleetSim:
                     # greedy launch-time route choice (the controller, when
                     # wired, stamps sweep-assigned routes on req.path)
                     req.path = self.plane.pick_route(req.src, req.dst)
+                if self._guard is not None:
+                    # stamp the admission-time price the guard holds the
+                    # lane to (NaN-free only when a guard is wired — the
+                    # stamping itself must not perturb guardless runs)
+                    self._stamp_expectation(req, job)
                 # register the lane with its PiecewiseRate table so the
                 # plane's vectorized event loop accrues its dirty bytes
                 # through the batched lookup (see core/rates.py)
@@ -722,6 +802,12 @@ class FleetSim:
             # one sampling period of contended execution: every in-flight
             # migration advances together, link shares recomputed at events
             for req, outcome in self.plane.advance(self.now):
+                if outcome.stop_reason == strunk.STOP_GUARD:
+                    # convergence watchdog cut the lane: misprediction
+                    # feedback + backoff re-admission, not a completion
+                    self._handle_guard_abort(req, outcome, self.now,
+                                             launch_info)
+                    continue
                 self.lmcm.finish(req, outcome)
                 per_job[req.job_id] = outcome
                 done.append(req)

@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import heapq
 import inspect
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -88,6 +89,12 @@ class MigrationRequest:
     # --- failure/retry state (fault-injecting scenarios) ---
     retries: int = 0                    # re-admissions after aborts so far
     attempt_bytes: float = 0.0          # bytes wasted by aborted attempts
+    # admission-time priced prediction (stamped by the simulator from the
+    # controller's cost batch at launch); the execute plane's prediction
+    # guard (core/guard.py) watches realized progress against these and
+    # throttles/aborts diverging lanes. None = lane runs unguarded.
+    expected_bytes: Optional[float] = None
+    expected_time: Optional[float] = None
     # urgent requests (failure recovery: the workload is gone, there is
     # no cycle left to time against) bypass policy postponement at submit
     # and at the release boundary — concurrency control still applies
@@ -109,7 +116,8 @@ class LMCM:
                  sample_period: float = 1.0,
                  surveillance: Optional[SurveillanceEngine] = None,
                  min_share_frac: float = 0.0,
-                 retry_backoff_s: float = 4.0, retry_max: int = 3):
+                 retry_backoff_s: float = 4.0, retry_max: int = 3,
+                 retry_jitter: float = 0.0, retry_jitter_seed: int = 0):
         assert policy in ("immediate", "alma-paper", "alma-plus")
         self.policy = policy
         self.max_wait = max_wait
@@ -151,6 +159,15 @@ class LMCM:
         # failed permanently
         self.retry_backoff_s = retry_backoff_s
         self.retry_max = retry_max
+        # deterministic backoff de-collision: a mass abort (host failure,
+        # guard storm) re-admits many requests off the SAME event, so pure
+        # exponential backoff re-collides them all on the same tick
+        # forever. ``retry_jitter`` > 0 stretches each wait by up to that
+        # fraction, keyed by a stable per-(job, attempt, seed) hash —
+        # de-synchronized across jobs, reproducible across runs, and 0 by
+        # default (bit-parity with the un-jittered schedule)
+        self.retry_jitter = float(retry_jitter)
+        self.retry_jitter_seed = int(retry_jitter_seed)
         # endpoint revalidation hook, wired by the simulator: called on a
         # request before re-admission and again at the release boundary;
         # it may rewrite src/dst/path (e.g. route around dead hosts) and
@@ -341,6 +358,13 @@ class LMCM:
             return False
         req.retries += 1
         wait = self.retry_backoff_s * (2.0 ** (req.retries - 1))
+        if self.retry_jitter > 0.0:
+            # crc32 is stable across processes (unlike hash()), so the
+            # jittered schedule is reproducible per seed while distinct
+            # jobs aborted by one event fan out over [wait, wait*(1+j))
+            h = zlib.crc32(f"{self.retry_jitter_seed}:{req.job_id}:"
+                           f"{req.retries}".encode())
+            wait *= 1.0 + self.retry_jitter * (h / 2.0 ** 32)
         if req.deadline is not None:
             t_mig = strunk.strunk_bounds(req.v_bytes,
                                          self.effective_bandwidth(req))[0]

@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import network, strunk
+from repro.core.guard import MigrationGuard, expectation_of, throttled_spec
 from repro.core.rates import RateBank, RateSpec, as_rate_table
 
 _COPY, _STOP = 0, 1
@@ -65,6 +66,7 @@ class _LaneMeta:
     path: Tuple[str, ...]
     t_start: float
     path_ids: Optional[np.ndarray] = None  # Topology.ids_of(path) fast view
+    spec0: RateSpec = None               # pre-throttle spec (None: unthrottled)
 
 
 @dataclass
@@ -91,13 +93,20 @@ class LaneState:
 class MigrationPlane:
     """Event-driven executor for concurrent pre-copy migrations."""
 
+    # SoA lane arrays, resized together on every launch/drop/merge
+    _SOA_FIELDS = ("_v", "_rem", "_round", "_acc", "_sent", "_rounds",
+                   "_down", "_phase", "_reason", "_exp_b", "_exp_t",
+                   "_t0", "_thr", "_thr_round")
+
     def __init__(self, topology: network.Topology, *,
                  page: int = strunk.PAGE,
                  max_rounds: int = strunk.XEN_MAX_ROUNDS,
                  stop_dirty_pages: int = strunk.XEN_STOP_DIRTY_PAGES,
                  stop_total_factor: float = strunk.XEN_STOP_TOTAL_FACTOR,
-                 vectorized: bool = True):
+                 vectorized: bool = True,
+                 guard: Optional[MigrationGuard] = None):
         self.topology = topology
+        self._guard = guard
         self.caps = topology.capacities
         # id-indexed snapshot of ``caps`` (aligned with topology.link_ids):
         # the integer fast path of probe_bandwidth/path_capacity reads
@@ -123,6 +132,14 @@ class MigrationPlane:
         self._down = np.zeros(0)
         self._phase = np.zeros(0, np.int8)
         self._reason = np.zeros(0, np.int8)
+        # prediction-guard rows (core/guard.py): admission-time expectation
+        # (NaN = unguarded lane), launch clock, throttle-ladder step, and
+        # the round count at the last escalation (one step per round)
+        self._exp_b = np.zeros(0)
+        self._exp_t = np.zeros(0)
+        self._t0 = np.zeros(0)
+        self._thr = np.zeros(0, np.int64)
+        self._thr_round = np.zeros(0, np.int64)
         # vectorized-chunk banks: extended in place on launch/merge,
         # rebuilt lazily only after lane drops. Membership fair shares
         # and scratch sizing are deferred separately (_shares_stale): a
@@ -388,11 +405,14 @@ class MigrationPlane:
         return self._abort_rows(
             [i for i, m in enumerate(self._meta) if link in m.path])
 
-    def _abort_rows(self, rows: List[int]
+    def _abort_rows(self, rows: List[int],
+                    stop_reason: str = strunk.STOP_ABORTED
                     ) -> List[Tuple[object, strunk.MigrationOutcome]]:
         """Drop the lanes at ``rows`` through the same keep-index path a
         completion uses (banks rebuild lazily; the link-set cache and
-        drained union-find incarnations are the fabric's to release)."""
+        drained union-find incarnations are the fabric's to release).
+        ``stop_reason`` distinguishes fault aborts (``STOP_ABORTED``) from
+        convergence-guard aborts (``STOP_GUARD``)."""
         if not rows:
             return []
         aborted: List[Tuple[object, strunk.MigrationOutcome]] = []
@@ -406,12 +426,11 @@ class MigrationPlane:
                 downtime=float(self._down[i]),
                 bytes_sent=max(0.0, partial),
                 rounds=int(self._rounds[i]),
-                stop_reason=strunk.STOP_ABORTED)))
+                stop_reason=stop_reason)))
         dead = set(rows)
         keep = [i for i in range(len(self._meta)) if i not in dead]
         self._meta = [self._meta[i] for i in keep]
-        for name in ("_v", "_rem", "_round", "_acc", "_sent",
-                     "_rounds", "_down", "_phase", "_reason"):
+        for name in self._SOA_FIELDS:
             setattr(self, name, getattr(self, name)[keep])
         self._banks_stale = True
         self._link_set_cache = None
@@ -419,7 +438,8 @@ class MigrationPlane:
 
     # -- lifecycle -----------------------------------------------------------
     def launch(self, req, rate: RateSpec, now: float, *,
-               path: Optional[Sequence[str]] = None) -> None:
+               path: Optional[Sequence[str]] = None,
+               expect: Optional[Tuple[float, float]] = None) -> None:
         """Start executing ``req`` at time ``now`` (>= plane time).
 
         ``rate`` is the lane's dirty-rate spec — a ``rates.PiecewiseRate``
@@ -427,6 +447,14 @@ class MigrationPlane:
         through one batched lookup), a constant, an object exposing
         ``rate_table``, a plain callable of absolute time (compatibility:
         sampled per lane per event), or None.
+
+        ``expect`` is the lane's admission-time prediction,
+        ``(expected_bytes, expected_time)`` as priced by the controller's
+        cost batch; defaults to the ``expected_bytes``/``expected_time``
+        attributes stamped on ``req`` (NaN when absent). When the plane
+        carries a ``MigrationGuard``, lanes whose realized progress
+        diverges from this expectation are throttled then aborted (see
+        ``core/guard.py``); without an expectation a lane is exempt.
         """
         if now > self.now:
             self._backlog.extend(self.advance(now))
@@ -451,6 +479,12 @@ class MigrationPlane:
         self._down = np.append(self._down, 0.0)
         self._phase = np.append(self._phase, _COPY)
         self._reason = np.append(self._reason, strunk.REASON_MAX_ROUNDS)
+        exp_b, exp_t = expect if expect is not None else expectation_of(req)
+        self._exp_b = np.append(self._exp_b, float(exp_b))
+        self._exp_t = np.append(self._exp_t, float(exp_t))
+        self._t0 = np.append(self._t0, now)
+        self._thr = np.append(self._thr, 0)
+        self._thr_round = np.append(self._thr_round, -1)
         if self._banks_fresh:
             self._extend_banks(meta)     # O(1) Python, no membership rescan
         else:
@@ -664,17 +698,76 @@ class MigrationPlane:
             if drop:
                 keep = [i for i in range(len(self._meta)) if i not in drop]
                 self._meta = [self._meta[i] for i in keep]
-                for name in ("_v", "_rem", "_round", "_acc", "_sent",
-                             "_rounds", "_down", "_phase", "_reason"):
+                for name in self._SOA_FIELDS:
                     setattr(self, name, getattr(self, name)[keep])
                 self._banks_stale = True
                 self._link_set_cache = None
+            # convergence watchdog: every settle is a round boundary for
+            # some lane — re-check the whole fleet's realized-vs-predicted
+            # divergence (one vectorized pass; guard aborts flow out
+            # through ``finished`` like any completion, so the fabric's
+            # link-release path needs no special casing)
+            if self._guard is not None and self._meta and complete.any():
+                finished.extend(self._guard_check())
+        # window boundary check: catches time divergence on lanes that
+        # never settle inside this advance (e.g. stalled at share 0)
+        if self._guard is not None and self._meta:
+            finished.extend(self._guard_check())
         # an infinite drain must not poison the clock: time only ever
         # fast-forwards to a finite target
         if not self._meta and self.now < until and np.isfinite(until):
             self.now = until
         self._fold_link_vec()
         return finished
+
+    # -- prediction guard ----------------------------------------------------
+    def _guard_check(self) -> List[Tuple[object, strunk.MigrationOutcome]]:
+        """One vectorized watchdog pass over every in-flight lane: compare
+        realized progress (the abort path's exact byte accounting) against
+        the admission-time expectation and fire the policy ladder —
+        auto-converge throttling at ``throttle_ratio``, abort-and-retry
+        with ``stop_reason == strunk.STOP_GUARD`` at ``abort_ratio``.
+        Lanes already in stop-and-copy are left to finish (aborting a
+        migration during its final downtime burst only wastes it)."""
+        g = self._guard
+        sent = np.maximum(0.0, self._sent + (self._round - self._rem))
+        div = g.divergence(sent, self.now - self._t0,
+                           self._exp_b, self._exp_t)
+        copying = self._phase == _COPY
+        abort = copying & (div >= g.abort_ratio)
+        throttle = copying & ~abort & (div >= g.throttle_ratio)
+        # escalate the ladder at most once per pre-copy round: a diverged
+        # lane mid-round keeps its current cap until the next settle
+        throttle &= self._rounds > self._thr_round
+        for i in np.flatnonzero(throttle):
+            self._throttle_row(int(i))
+        if not abort.any():
+            return []
+        rows = [int(i) for i in np.flatnonzero(abort)]
+        g.n_aborts += len(rows)
+        return self._abort_rows(rows, stop_reason=strunk.STOP_GUARD)
+
+    def _throttle_row(self, i: int) -> None:
+        """Apply the next auto-converge step to lane ``i``: swap its spec
+        for a progressively scaled table (``guard.throttled_spec`` — the
+        composable transform every repricing consumer shares) and flag the
+        banks for a lazy rebuild. Past the throttle floor the ladder stops
+        escalating and only the abort rung remains."""
+        g = self._guard
+        self._thr_round[i] = int(self._rounds[i])
+        f = g.factor_for(int(self._thr[i]) + 1)
+        if f is None:
+            return
+        m = self._meta[i]
+        if m.spec0 is None:
+            m.spec0 = m.spec
+        spec = throttled_spec(m.spec0, f)
+        m.spec = spec
+        m.rate_fn = spec if (spec is None or callable(spec)) \
+            else as_rate_table(spec)
+        self._thr[i] += 1
+        g.n_throttles += 1
+        self._banks_stale = True
 
     def _settle(self, i: int) -> Optional[strunk.MigrationOutcome]:
         """A lane's current transfer just completed: close the round (apply
@@ -734,8 +827,7 @@ class MigrationPlane:
                        and not any(l in self._link_row
                                    for l in other._link_order))
         self._meta.extend(other._meta)
-        for name in ("_v", "_rem", "_round", "_acc", "_sent",
-                     "_rounds", "_down", "_phase", "_reason"):
+        for name in self._SOA_FIELDS:
             setattr(self, name, np.concatenate(
                 [getattr(self, name), getattr(other, name)]))
         for l, b in other._link_bytes.items():

@@ -54,6 +54,13 @@ STOP_REASONS = ("dirty_low", "max_rounds", "total_cap")
 # never produces it, only the abort path does, so completion and abort
 # outcomes stay distinguishable by stop_reason alone
 STOP_ABORTED = "aborted"
+# a lane settled early by the prediction guard (core/guard.py): realized
+# progress diverged past the abort ratio of its admission-time priced
+# expectation. Like STOP_ABORTED it is NOT in STOP_REASONS (only the
+# watchdog produces it), and it is distinct from fault aborts so the
+# simulator can route misprediction feedback (forced refit, trust decay)
+# without confusing it with infrastructure failure
+STOP_GUARD = "guard_abort"
 
 
 def strunk_bounds(v_mem: float, bandwidth: float,

@@ -86,12 +86,20 @@ class SurveilledJob:
     # profile is indexed from here, so Alg.2's M_current must be too
     origin_step: int = 0
     fitted_step: int = -1               # latest step at last fit (-1 = never)
+    # misprediction feedback (core/guard.py): decayed by each guard abort
+    # of this job's migrations, floor-clamped by the guard's policy. The
+    # receding-horizon controller gates trough pricing on
+    # confidence x trust, so a burned fit stops deferring launches to
+    # troughs the model hallucinated until refits re-earn it.
+    trust: float = 1.0
 
 
 class TickResult:
     """One surveillance tick's outcome: ``remain`` (job -> Alg.2 RemainTime
     in samples), ``refitted`` (cycle fits recomputed), ``fleet`` (jobs with
-    a current model).
+    a current model), ``confidence`` (job -> spectral confidence of its
+    current fit — the guard layer's gating input, shared with the packed
+    Alg. 2 cache so surfacing it costs no per-tick Python).
 
     With ``overlap=True`` the engine constructs this while Algorithm 2 is
     still executing on device (jax async dispatch); the ``remain`` dict is
@@ -99,13 +107,15 @@ class TickResult:
     values are bit-identical to the synchronous schedule — only the host
     sync moves.
     """
-    __slots__ = ("_remain", "refitted", "fleet", "_thunk")
+    __slots__ = ("_remain", "refitted", "fleet", "confidence", "_thunk")
 
     def __init__(self, remain: Optional[Dict[str, int]], refitted: int,
-                 fleet: int, _thunk: Optional[Callable] = None):
+                 fleet: int, confidence: Optional[Dict[str, float]] = None,
+                 _thunk: Optional[Callable] = None):
         self._remain = remain
         self.refitted = refitted
         self.fleet = fleet
+        self.confidence = confidence if confidence is not None else {}
         self._thunk = _thunk
 
     @property
@@ -133,10 +143,18 @@ class SurveillanceEngine:
                  acyclic_refit: int = 8,
                  use_kernel: Optional[bool] = None,
                  shards: Optional[int] = None,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 min_coverage: float = 0.5):
         self.folded = folded
         self.min_samples = min_samples
         self.acyclic_refit = acyclic_refit
+        # degraded-telemetry gate: fraction of a job's gathered window that
+        # must be valid (recorded AND finite — NaN samples are sensor
+        # dropout) for its cycle fit to be trusted; rows below it demote to
+        # an acyclic model instead of fitting a cycle to zero-filled holes.
+        # Clean telemetry always has coverage 1.0, so the gate is inert
+        # until NaNs appear.
+        self.min_coverage = float(min_coverage)
         self.use_kernel = use_kernel
         self.shards = shards
         self.overlap = overlap
@@ -253,8 +271,13 @@ class SurveillanceEngine:
     def _refresh_group(self, jobs: List[SurveilledJob],
                        latest: np.ndarray, m: int, tail: int) -> None:
         G = len(jobs)
-        W, _ = TelemetryBuffer.window_matrix(
-            [j.telemetry for j in jobs], tail)              # (G, tail, F)
+        # masked gather: NaN dropout samples come back zero-filled (the
+        # batched NB/FFT stays finite) with their invalidity recorded, so
+        # starved rows can be demoted instead of fit to hole-filled data
+        W, counts, valid = TelemetryBuffer.window_matrix(
+            [j.telemetry for j in jobs], tail,
+            return_mask=True)                               # (G, tail, F)
+        coverage = valid.sum(axis=1) / np.maximum(counts, 1)
         # bucket BOTH batch axes so the jitted NB doesn't retrace per stale
         # subset (job axis) or per history length (time axis — zero rows at
         # the front classify to garbage and are sliced off; NB is per-sample)
@@ -279,7 +302,15 @@ class SurveillanceEngine:
         models = cycles.fit_cycle_batch(LM, folded=self.folded,
                                         use_kernel=self.use_kernel,
                                         mesh=self.mesh)
-        for job, model, lm_row, ls in zip(jobs, models, LM, latest):
+        for i, (job, model, lm_row, ls) in enumerate(
+                zip(jobs, models, LM, latest)):
+            if coverage[i] < self.min_coverage:
+                # blackout-starved window: a cycle fit over zero-filled
+                # holes is noise — demote to acyclic (same shape as the
+                # not-found branch of fit_cycle_batch) until telemetry
+                # recovers and a later refit sees real samples again
+                model = cycles.CycleModel(0, 0.0, np.asarray(
+                    [1 if lm_row.mean() >= 0.5 else 0], np.int8))
             job.model = model
             job.lm_series = lm_row
             job.origin_step = int(ls) - m + 1
@@ -295,14 +326,14 @@ class SurveillanceEngine:
 
     # -- the batched tick ---------------------------------------------------
     def _packed_fleet(self) -> Tuple:
-        """(ids, origins, profiles, periods) for the fitted fleet, padded/
-        bucketed for Alg. 2 — cached between ticks and invalidated only by
-        register/unregister/refit, so an all-fresh tick does no per-job
-        Python work past the staleness scan."""
+        """(ids, origins, profiles, periods, confidence) for the fitted
+        fleet, padded/bucketed for Alg. 2 — cached between ticks and
+        invalidated only by register/unregister/refit, so an all-fresh
+        tick does no per-job Python work past the staleness scan."""
         if self._decide_cache is None:
             fitted = [j for j in self.jobs.values() if j.model is not None]
             if not fitted:
-                self._decide_cache = ((), None, None, None)
+                self._decide_cache = ((), None, None, None, {})
             else:
                 p_max = max((j.model.period for j in fitted
                              if j.model.period > 1), default=1)
@@ -313,7 +344,9 @@ class SurveillanceEngine:
                 origins = np.zeros(J_p, np.int64)
                 origins[: len(fitted)] = [j.origin_step for j in fitted]
                 self._decide_cache = (tuple(j.job_id for j in fitted),
-                                      origins, profiles, periods)
+                                      origins, profiles, periods,
+                                      {j.job_id: float(j.model.confidence)
+                                       for j in fitted})
         return self._decide_cache
 
     def next_trough(self, job_ids: List[str], now_step: int
@@ -348,7 +381,7 @@ class SurveillanceEngine:
         are sliced off before the dict is built.
         """
         refitted = self.refresh()
-        ids, origins, profiles, periods = self._packed_fleet()
+        ids, origins, profiles, periods, conf = self._packed_fleet()
         if not ids:
             return TickResult({}, refitted, 0)
         m_now = (now_step - origins).astype(np.int32)   # one vector op
@@ -360,5 +393,5 @@ class SurveillanceEngine:
             return dict(zip(ids, np.asarray(dev)[:J].tolist()))
 
         if self.overlap:
-            return TickResult(None, refitted, J, _thunk=materialize)
-        return TickResult(materialize(), refitted, J)
+            return TickResult(None, refitted, J, conf, _thunk=materialize)
+        return TickResult(materialize(), refitted, J, conf)

@@ -76,8 +76,8 @@ class TelemetryBuffer:
         return {f: w[:, j] for j, f in enumerate(self.fields)}
 
     @staticmethod
-    def window_matrix(buffers: Sequence["TelemetryBuffer"], n: int
-                      ) -> Tuple[np.ndarray, np.ndarray]:
+    def window_matrix(buffers: Sequence["TelemetryBuffer"], n: int,
+                      return_mask: bool = False):
         """Gather the most recent ``n`` samples of many buffers into one
         (J, n, F) SoA batch in a single call.
 
@@ -86,11 +86,17 @@ class TelemetryBuffer:
         ``window`` copies into the preallocated output. Short histories are
         left zero at the front; the second return value holds each job's
         valid sample count (callers batch jobs with equal counts).
+
+        ``return_mask=True`` adds a (J, n) bool validity mask (recorded AND
+        every field finite); non-finite samples are zero-filled in the
+        output so classify/cycle-fit math stays finite while coverage
+        gates see the dropout.
         """
         J = len(buffers)
         F = len(buffers[0].fields) if J else 0
         out = np.zeros((J, n, F), np.float64)
         lengths = np.zeros(J, np.int64)
+        mask = np.zeros((J, n), bool) if return_mask else None
         # fleet fast path: group contiguous views of a shared SoA store
         by_fleet: Dict[int, List[int]] = {}
         for j, b in enumerate(buffers):
@@ -102,7 +108,12 @@ class TelemetryBuffer:
         for js in by_fleet.values():
             fleet = buffers[js[0]].fleet
             rows = np.asarray([buffers[j].index for j in js])
-            w, m = fleet.window_matrix(n, rows=rows)
+            if return_mask:
+                w, m, fm = fleet.window_matrix(n, rows=rows,
+                                               return_mask=True)
+                mask[js] = fm
+            else:
+                w, m = fleet.window_matrix(n, rows=rows)
             out[js] = w
             lengths[js] = m
             done[js] = True
@@ -112,7 +123,13 @@ class TelemetryBuffer:
             w = b.window(n)
             lengths[j] = len(w)
             if len(w):
+                if return_mask:
+                    finite = np.isfinite(w).all(axis=1)
+                    mask[j, n - len(w):] = finite
+                    w = np.where(finite[:, None], w, 0.0)
                 out[j, n - len(w):] = w
+        if return_mask:
+            return out, lengths, mask
         return out, lengths
 
 
@@ -237,11 +254,18 @@ class FleetTelemetry:
             out[self._n == 0] = -1
             return out
 
-    def window_matrix(self, n: int, rows: Optional[np.ndarray] = None
-                      ) -> Tuple[np.ndarray, np.ndarray]:
+    def window_matrix(self, n: int, rows: Optional[np.ndarray] = None,
+                      return_mask: bool = False):
         """Most recent ``n`` samples for ``rows`` (default: all jobs) as one
         (len(rows), n, F) gather, oldest first, zero-padded at the front.
-        Returns (matrix, per-job valid counts)."""
+        Returns (matrix, per-job valid counts).
+
+        With ``return_mask=True`` also returns a (R, n) bool validity mask:
+        True only for recorded samples whose every field is finite. NaN
+        samples (sensor dropout / telemetry blackout) are zero-filled in
+        the matrix so downstream batched math stays finite, and masked
+        False so coverage gates can demote starved rows; the default call
+        leaves NaNs in place (the store accepts them verbatim)."""
         with self._lock:
             if rows is None:
                 rows = np.arange(self.n_jobs)
@@ -257,4 +281,9 @@ class FleetTelemetry:
             idx = (start[:, None] + rel) % self.capacity
             w = self._data[rows[:, None], idx]
             w[rel < 0] = 0.0
-            return w, m
+            if not return_mask:
+                return w, m
+            finite = np.isfinite(w).all(axis=2)             # (R, n)
+            mask = (rel >= 0) & finite
+            w[~finite] = 0.0
+            return w, m, mask

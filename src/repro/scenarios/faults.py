@@ -31,6 +31,15 @@ Event kinds
     ToR/pod-uplink loss fails the lanes over to a surviving spine plane
     instead of stalling them in place the way a 0.0 ``link_degrade``
     does. ``link_restore`` brings the link back.
+``telemetry_blackout`` / ``telemetry_restore``
+    Sensor dropout: from ``t`` until the matching restore, the listed
+    ``jobs`` record NaN telemetry samples instead of real load indexes.
+    The simulator injects the NaNs identically on its scalar and bulk
+    recording paths (and the rng draws are unchanged — values are
+    overwritten after sampling), so blacked-out runs stay bit-identical
+    between ``event_skip`` on/off. Downstream, the surveillance gather
+    masks the NaNs and demotes under-covered rows to acyclic
+    (``SurveillanceEngine.min_coverage``).
 
 An empty plan is falsy; ``FleetSim`` treats it exactly like no plan at
 all, which is what keeps every existing benchmark and bit-identity
@@ -48,7 +57,10 @@ HOST_RECOVER = "host_recover"
 LINK_DEGRADE = "link_degrade"
 LINK_RESTORE = "link_restore"
 LINK_FAIL = "link_fail"
-KINDS = (HOST_FAIL, HOST_RECOVER, LINK_DEGRADE, LINK_RESTORE, LINK_FAIL)
+TELEMETRY_BLACKOUT = "telemetry_blackout"
+TELEMETRY_RESTORE = "telemetry_restore"
+KINDS = (HOST_FAIL, HOST_RECOVER, LINK_DEGRADE, LINK_RESTORE, LINK_FAIL,
+         TELEMETRY_BLACKOUT, TELEMETRY_RESTORE)
 
 
 @dataclass(frozen=True)
@@ -57,6 +69,9 @@ class FaultEvent:
     kind: str                # one of KINDS
     target: str              # host id (host_*) or link id (link_*)
     capacity: float = 0.0    # link events: the new capacity, bytes/s
+    # telemetry events: the affected job ids (sensor dropout is per
+    # monitoring agent, not per link). Empty on other kinds.
+    jobs: tuple = ()
 
     def __post_init__(self):
         if self.kind not in KINDS:
@@ -158,8 +173,30 @@ class FaultPlan:
                 t + mttr_s, LINK_RESTORE, l, capacity=link_caps[l]))
         return cls(events)
 
+    @classmethod
+    def telemetry_blackout(cls, t: float, jobs: Sequence[str], *,
+                           duration_s: float, frac: float = 1.0,
+                           seed: int = 0) -> "FaultPlan":
+        """Seeded sensor dropout: a ``frac`` subset of ``jobs`` (chosen
+        deterministically by ``seed``) records NaN samples over
+        ``[t, t + duration_s)``. ``frac=1.0`` blacks out every listed
+        job (no rng draw — independent of seed)."""
+        jobs = list(jobs)
+        if frac >= 1.0:
+            picked = tuple(jobs)
+        else:
+            rng = np.random.default_rng(seed)
+            k = max(1, int(round(frac * len(jobs))))
+            picked = tuple(sorted(
+                np.asarray(jobs)[rng.permutation(len(jobs))[:k]].tolist()))
+        return cls([
+            FaultEvent(t, TELEMETRY_BLACKOUT, "", jobs=picked),
+            FaultEvent(t + duration_s, TELEMETRY_RESTORE, "", jobs=picked),
+        ])
+
     def shifted(self, dt: float) -> "FaultPlan":
         """The same plan with every event time shifted by ``dt`` —
         scenarios author relative times, then shift past warmup."""
-        return FaultPlan(FaultEvent(e.t + dt, e.kind, e.target, e.capacity)
+        return FaultPlan(FaultEvent(e.t + dt, e.kind, e.target, e.capacity,
+                                    e.jobs)
                          for e in self.events)

@@ -1,0 +1,446 @@
+"""Prediction-guard layer (core/guard.py) and its wiring.
+
+The load-bearing contracts:
+
+* a plane/fleet built with ``guard=None`` (or a guard whose thresholds
+  never trip) is BIT-IDENTICAL to a guard-less build — evaluation alone
+  must not perturb a single byte;
+* the policy ladder: throttling replaces the lane's table with a
+  composably scaled ``PiecewiseRate`` (auto-converge), and the abort
+  rung settles the lane with ``stop_reason == strunk.STOP_GUARD`` —
+  distinct from fault aborts — feeding wasted-bytes accounting and the
+  LMCM backoff path;
+* lanes without an admission-time expectation (NaN) are structurally
+  exempt;
+* misprediction feedback: a guard abort decays the job's ``trust``,
+  forces its fit stale, and ``confidence x trust`` below the gate turns
+  trough pricing off;
+* degraded telemetry: blackout faults record NaN AFTER the rng draw
+  (stream unchanged), ``window_matrix`` exposes a validity mask,
+  low-coverage fits demote to acyclic, and faulted+guarded runs stay
+  bit-identical between ``event_skip`` on/off;
+* S1: degenerate windows (no spectral mass) fit with confidence 0 and
+  per-job confidence is surfaced on ``TickResult``;
+* S2: seeded retry jitter de-synchronizes mass-abort backoff
+  deterministically.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import cycles, network, strunk
+from repro.core.fabric import ShardedPlane
+from repro.core.fleetsim import FleetSim, SimJob, table3_traces
+from repro.core.guard import MigrationGuard, expectation_of, throttled_spec
+from repro.core.orchestrator import LMCM, MigrationRequest
+from repro.core.plane import MigrationPlane
+from repro.core.rates import PiecewiseRate
+from repro.core.telemetry import FleetTelemetry
+from repro.scenarios.faults import FaultEvent, FaultPlan
+
+CAP = 125e6
+
+
+# ---------------------------------------------------------------------------
+# MigrationGuard unit surface
+# ---------------------------------------------------------------------------
+def test_guard_ctor_validates():
+    with pytest.raises(ValueError):
+        MigrationGuard(throttle_ratio=0.5)
+    with pytest.raises(ValueError):
+        MigrationGuard(throttle_ratio=4.0, abort_ratio=3.0)
+    with pytest.raises(ValueError):
+        MigrationGuard(throttle_factor=1.0)
+    with pytest.raises(ValueError):
+        MigrationGuard(trust_decay=0.0)
+
+
+def test_divergence_nan_disarms():
+    g = MigrationGuard()
+    div = g.divergence(np.array([3e9, 3e9]), np.array([50.0, 50.0]),
+                       np.array([1e9, np.nan]), np.array([10.0, np.nan]))
+    assert div[0] == 5.0                       # max(bytes 3x, time 5x)
+    assert np.isnan(div[1])
+    # NaN compares False against every rung
+    assert not (div[1] >= g.throttle_ratio)
+    assert not (div[1] >= g.abort_ratio)
+
+
+def test_factor_ladder_floors():
+    g = MigrationGuard(throttle_factor=0.5, throttle_floor=0.2)
+    assert g.factor_for(1) == 0.5
+    assert g.factor_for(2) == 0.25
+    assert g.factor_for(3) is None             # 0.125 < floor
+
+
+def test_trust_decay_and_gate():
+    g = MigrationGuard(trust_decay=0.5, trust_gate=0.25, trust_floor=0.05)
+    t = 1.0
+    for expect in (0.5, 0.25, 0.125, 0.0625, 0.05, 0.05):
+        t = g.decay_trust(t)
+        assert t == expect
+    assert g.trusts(0.9, 1.0)
+    assert not g.trusts(0.9, 0.1)              # burned trust gates it off
+    assert not g.trusts(0.1, 1.0)              # low confidence alone too
+
+
+def test_expectation_of_reads_stamps():
+    req = MigrationRequest("j", 0.0, 1e9)
+    assert all(np.isnan(expectation_of(req)))
+    req.expected_bytes, req.expected_time = 2e9, 16.0
+    assert expectation_of(req) == (2e9, 16.0)
+
+
+def test_throttled_spec_composes():
+    tbl = PiecewiseRate([10.0, 30.0], [40e6, 8e6], offset=3.0)
+    half = throttled_spec(tbl, 0.5)
+    assert isinstance(half, PiecewiseRate)
+    assert np.array_equal(half.ends, tbl.ends)
+    assert np.array_equal(np.asarray(half.rates),
+                          np.asarray(tbl.rates) * 0.5)
+    assert half.offset == tbl.offset
+    # constants normalize to 1-entry tables; callables wrap; None passes
+    const = throttled_spec(30e6, 0.25)
+    assert isinstance(const, PiecewiseRate) and const(5.0) == 7.5e6
+    fn = throttled_spec(lambda t: 100.0 + t, 0.1)
+    assert fn(10.0) == pytest.approx(11.0)
+    assert throttled_spec(None, 0.5) is None
+
+
+def test_throttled_spec_reprices_bit_identically():
+    """The scaled table through ``what_if_cost_batch`` equals a manually
+    scaled table bit-for-bit — the repricing consistency the composable
+    transform exists for."""
+    tbl = PiecewiseRate([20.0, 50.0], [200e6, 30e6])
+    man = PiecewiseRate(tbl.ends, np.asarray(tbl.rates) * 0.5)
+    a = strunk.what_if_cost_batch([1e9], [CAP], [throttled_spec(tbl, 0.5)],
+                                  [7.0], full=True)
+    b = strunk.what_if_cost_batch([1e9], [CAP], [man], [7.0], full=True)
+    for f in ("total_time", "downtime", "bytes_sent", "rounds"):
+        assert np.array_equal(getattr(a, f), getattr(b, f)), f
+
+
+# ---------------------------------------------------------------------------
+# plane-level ladder
+# ---------------------------------------------------------------------------
+def _hostile_lane(guard, *, hot=300e6, v=1.5e9, expect=True, t_end=600.0):
+    plane = MigrationPlane(network.Topology.single_link(CAP), guard=guard)
+    req = MigrationRequest("h", 0.0, v, src="h0", dst="h1")
+    if expect:
+        # the optimistic admission price: a cheap lane at full capacity
+        out = strunk.what_if_cost_batch(
+            [v], CAP, [PiecewiseRate([1e9], [3e6])], [0.0], full=True)
+        req.expected_bytes = float(out.bytes_sent[0])
+        req.expected_time = float(out.total_time[0])
+    plane.launch(req, PiecewiseRate([1e9], [hot]), 0.0)
+    done, t = [], 0.0
+    while plane.in_flight and t < t_end:
+        t += 1.0
+        done.extend(plane.advance(t))
+    assert len(done) == 1
+    return done[0]
+
+
+def test_guard_that_never_trips_is_bit_identical():
+    base_req, base = _hostile_lane(None)
+    idle = MigrationGuard(throttle_ratio=1e9, abort_ratio=1e9)
+    req, out = _hostile_lane(idle)
+    assert idle.n_throttles == 0 and idle.n_aborts == 0
+    for f in ("total_time", "downtime", "bytes_sent", "rounds",
+              "stop_reason"):
+        assert getattr(out, f) == getattr(base, f), f
+
+
+def test_unstamped_lane_is_exempt():
+    g = MigrationGuard(throttle_ratio=1.1, abort_ratio=1.2)
+    _, out = _hostile_lane(g, expect=False)
+    assert g.n_throttles == 0 and g.n_aborts == 0
+    assert out.stop_reason != strunk.STOP_GUARD
+
+
+def test_throttle_rung_auto_converges():
+    """A steep patient ladder drags the hostile lane under the link speed:
+    it converges (dirty_low) with fewer bytes and far less downtime than
+    the unguarded grind to the Xen stop ladder."""
+    _, un = _hostile_lane(None, hot=200e6, v=1e9)
+    g = MigrationGuard(throttle_ratio=1.2, abort_ratio=50.0,
+                       throttle_factor=0.3)
+    _, out = _hostile_lane(g, hot=200e6, v=1e9)
+    assert g.n_throttles >= 1 and g.n_aborts == 0
+    assert out.bytes_sent < un.bytes_sent
+    assert out.downtime < un.downtime
+    assert out.stop_reason == strunk.STOP_REASONS[strunk.REASON_DIRTY_LOW]
+
+
+def test_abort_rung_emits_guard_stop_reason():
+    g = MigrationGuard(throttle_ratio=1.3, abort_ratio=2.0)
+    req, out = _hostile_lane(g, hot=4e9)
+    assert g.n_aborts == 1
+    assert out.stop_reason == strunk.STOP_GUARD == "guard_abort"
+    assert out.stop_reason != strunk.STOP_ABORTED    # distinct from faults
+    assert 0.0 < out.bytes_sent < 3.0 * 1.5e9        # partial, pre-cap
+    assert out.downtime == 0.0                       # never reached s&c
+
+
+def test_sharded_plane_plumbs_one_shared_guard():
+    topo = network.Topology.star(["a", "b", "c", "d"], CAP,
+                                 core_capacity=4 * CAP)
+    g = MigrationGuard(throttle_ratio=1.2, abort_ratio=2.0)
+    plane = ShardedPlane(topo, guard=g)
+    for i, (s, d) in enumerate((("a", "b"), ("c", "d"))):
+        req = MigrationRequest(f"j{i}", 0.0, 1.5e9, src=s, dst=d)
+        req.expected_bytes, req.expected_time = 1.6e9, 13.0
+        plane.launch(req, PiecewiseRate([1e9], [4e9]), 0.0)
+    done, t = [], 0.0
+    while plane.in_flight and t < 300.0:
+        t += 1.0
+        done.extend(plane.advance(t))
+    # disjoint domains, one aggregate counter
+    assert g.n_aborts == 2
+    assert all(o.stop_reason == strunk.STOP_GUARD for _, o in done)
+
+
+# ---------------------------------------------------------------------------
+# FleetSim wiring: parity, feedback, degraded telemetry
+# ---------------------------------------------------------------------------
+def _sim(policy="alma-plus", **kw):
+    traces = table3_traces(10.0)
+    jobs = [SimJob(n, tr, v_bytes=1.0e9) for n, tr in traces.items()]
+    sim = FleetSim(jobs, policy=policy, warmup_s=400.0, seed=7, **kw)
+    plan = [MigrationRequest(j.job_id, created_at=5.0 * i,
+                             v_bytes=j.v_bytes, src="h0", dst="h1")
+            for i, j in enumerate(jobs)]
+    return sim, plan
+
+
+def test_fleetsim_guard_none_bit_identical():
+    s1, p1 = _sim()
+    r1 = s1.run_with_plan(p1, horizon_s=1200.0)
+    s2, p2 = _sim(guard=None)
+    r2 = s2.run_with_plan(p2, horizon_s=1200.0)
+    assert r1.total_bytes == r2.total_bytes
+    assert r1.total_time == r2.total_time
+    assert r1.completed_at == r2.completed_at
+    w1, _ = s1.telemetry.window_matrix(512)
+    w2, _ = s2.telemetry.window_matrix(512)
+    assert np.array_equal(w1, w2)
+
+
+def test_fleetsim_guard_abort_decays_trust_and_forces_refit():
+    g = MigrationGuard(throttle_ratio=1.5, abort_ratio=2.0)
+    # immediate launches right after warmup (t=400); the brownout stalls
+    # the lane mid-flight two seconds later, so realized time diverges
+    # from the stamped expectation until the guard cuts it loose
+    plan_fault = FaultPlan.link_brownout(402.0, "migration-net", 1e5,
+                                         restore_at=700.0,
+                                         restore_capacity=CAP)
+    s, p = _sim(policy="immediate", guard=g, fault_plan=plan_fault)
+    res = s.run_with_plan(p[:1], horizon_s=1000.0)
+    assert g.n_aborts >= 1
+    sj = s.lmcm.engine.jobs[p[0].job_id]
+    assert sj.trust < 1.0                      # misprediction feedback
+    assert res.n_aborts >= 1 and res.aborted_bytes > 0.0
+    assert res.n_retries >= 1                  # backoff re-admission
+    assert res.completed_at                    # finished after restore
+
+
+def test_trough_gate_on_burned_trust():
+    g = MigrationGuard(trust_gate=0.25)
+    s, p = _sim(guard=g, adaptive_concurrency=True, horizon=True)
+    req = p[0]
+    s._tag_request(req)
+    jid = req.job_id
+    s.lmcm.engine.refresh_model(jid, force=True)
+    sj = s.lmcm.engine.jobs[jid]
+    assert sj.model is not None
+    before = s._trough_of(req, s.now)
+    sj.trust = 0.01                            # as if aborts burned it
+    assert s._trough_of(req, s.now) is None
+    sj.trust = 1.0
+    assert s._trough_of(req, s.now) == before
+
+
+def _blackout_sim(event_skip, *, with_plan=True, policy="immediate"):
+    traces = table3_traces(10.0)
+    jobs = [SimJob(n, tr, v_bytes=1.0e9) for n, tr in traces.items()]
+    fp = FaultPlan.telemetry_blackout(
+        100.0, [jobs[0].job_id, jobs[1].job_id], duration_s=150.0) \
+        if with_plan else None
+    sim = FleetSim(jobs, policy=policy, warmup_s=400.0, seed=7,
+                   fault_plan=fp, event_skip=event_skip)
+    plan = [MigrationRequest(j.job_id, created_at=5.0 * i,
+                             v_bytes=j.v_bytes, src="h0", dst="h1")
+            for i, j in enumerate(jobs)]
+    res = sim.run_with_plan(plan, horizon_s=1200.0)
+    return sim, res
+
+
+def test_blackout_event_skip_bit_identity():
+    s1, r1 = _blackout_sim(True, policy="alma-plus")
+    s2, r2 = _blackout_sim(False, policy="alma-plus")
+    assert r1.total_bytes == r2.total_bytes
+    assert r1.completed_at == r2.completed_at
+    w1, _ = s1.telemetry.window_matrix(2048)
+    w2, _ = s2.telemetry.window_matrix(2048)
+    assert np.array_equal(w1, w2, equal_nan=True)
+    assert np.isnan(w1).any()
+
+
+def test_blackout_overwrites_after_draw_stream_unchanged():
+    """NaN injection must not consume or skip rng draws: every sample of
+    every NON-blacked-out job is bit-identical to the fault-free run."""
+    s_base, r_base = _blackout_sim(True, with_plan=False)
+    s_fault, r_fault = _blackout_sim(True, with_plan=True)
+    assert r_base.total_bytes == r_fault.total_bytes   # immediate ignores
+    w0, _ = s_base.telemetry.window_matrix(2048)
+    w1, _ = s_fault.telemetry.window_matrix(2048)
+    blacked = ~np.isfinite(w1).all(axis=(1, 2)) | \
+        ~np.isfinite(w0).all(axis=(1, 2))
+    assert blacked.sum() == 2
+    assert np.array_equal(w0[~blacked], w1[~blacked])
+    # blacked rows: NaN exactly inside the episode, real samples outside
+    nan_steps = np.isnan(w1[blacked]).all(axis=2)
+    assert nan_steps.any() and not nan_steps.all()
+
+
+def test_low_coverage_demotes_to_acyclic():
+    traces = table3_traces(10.0)
+    jobs = [SimJob(n, tr, v_bytes=1.0e9) for n, tr in traces.items()]
+    victim = jobs[1].job_id                    # vm02_C: strongly cyclic
+    fp = FaultPlan.telemetry_blackout(700.0, [victim], duration_s=400.0)
+    sim = FleetSim(jobs, policy="alma-paper", warmup_s=600.0, seed=7,
+                   fault_plan=fp)
+    m0 = sim.lmcm.engine.refresh_model(victim, force=True)
+    assert m0 is not None and m0.cyclic        # clean fit first
+    sim.run_idle(600.0)                        # blackout covers > half
+    m1 = sim.lmcm.engine.refresh_model(victim, force=True)
+    assert m1 is not None and m1.period == 0 and not m1.cyclic
+    assert m1.confidence == 0.0
+
+
+def test_window_matrix_mask_default_path_unchanged():
+    fleet = FleetTelemetry(2, capacity=64)
+    for s in range(8):
+        vals = np.full((2, len(fleet.fields)), float(s + 1))
+        if s in (3, 4):
+            vals[1] = np.nan
+        fleet.record_fleet(s, vals)
+    w, m = fleet.window_matrix(6)
+    assert np.isnan(w[1]).any()                # default: raw, NaN intact
+    w2, m2, mask = fleet.window_matrix(6, return_mask=True)
+    assert np.array_equal(m, m2)
+    assert mask.shape == (2, 6)
+    assert mask[0].all()
+    assert mask[1].sum() == 4                  # two NaN steps invalid
+    assert not np.isnan(w2).any()              # masked gather zero-fills
+    assert np.array_equal(w2[0], w[0])
+
+
+# ---------------------------------------------------------------------------
+# S1: degenerate-window confidence
+# ---------------------------------------------------------------------------
+def test_degenerate_window_confidence_clamps_to_zero():
+    const = np.full(256, 3.0, np.float32)
+    p, conf = cycles.cycle_length(const)
+    assert conf == 0.0
+    p, conf = cycles.cycle_length(np.zeros(256, np.float32))
+    assert conf == 0.0
+    cyc = np.tile(np.r_[np.ones(8), np.zeros(8)], 16).astype(np.float32)
+    p, conf = cycles.cycle_length(cyc)
+    assert p == 16 and conf > 0.1
+
+
+def test_fit_cycle_batch_degenerate_rows():
+    cyc = np.tile(np.r_[np.ones(8, np.int8), np.zeros(8, np.int8)], 16)
+    batch = np.stack([np.ones(256, np.int8), cyc,
+                      np.zeros(256, np.int8)])
+    models = cycles.fit_cycle_batch(batch)
+    assert models[0].confidence == 0.0 and not models[0].cyclic
+    assert models[2].confidence == 0.0 and not models[2].cyclic
+    assert models[1].cyclic and models[1].confidence > 0.1
+
+
+def test_tick_result_surfaces_confidence():
+    s, _ = _sim(policy="alma-paper")
+    tr = s.lmcm.engine.tick(int(s.now / s.dt))
+    assert isinstance(tr.confidence, dict) and tr.confidence
+    for jid, c in tr.confidence.items():
+        assert jid in s.jobs and 0.0 <= c <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# S2: seeded retry jitter
+# ---------------------------------------------------------------------------
+def _aborted(bytes_sent=1e8):
+    return strunk.MigrationOutcome(total_time=5.0, downtime=0.0,
+                                   bytes_sent=bytes_sent, rounds=1,
+                                   stop_reason=strunk.STOP_ABORTED)
+
+
+def test_retry_jitter_desynchronizes_mass_aborts():
+    lm = LMCM(policy="immediate", retry_backoff_s=4.0, retry_jitter=0.5,
+              retry_jitter_seed=3)
+    wakes = []
+    for i in range(6):
+        req = MigrationRequest(f"j{i}", 0.0, 1e9)
+        assert lm.fail(req, _aborted(), 0.0)
+        wakes.append(req.scheduled_at)
+    assert len(set(wakes)) == len(wakes)       # all distinct
+    assert all(4.0 <= w <= 6.0 for w in wakes)  # base * [1, 1+jitter)
+
+
+def test_retry_jitter_seed_reproducible():
+    def wakes(seed):
+        lm = LMCM(policy="immediate", retry_backoff_s=4.0,
+                  retry_jitter=0.5, retry_jitter_seed=seed)
+        out = []
+        for i in range(4):
+            req = MigrationRequest(f"j{i}", 0.0, 1e9)
+            lm.fail(req, _aborted(), 0.0)
+            out.append(req.scheduled_at)
+        return out
+    assert wakes(3) == wakes(3)
+    assert wakes(3) != wakes(4)
+
+
+def test_retry_jitter_zero_is_exact_baseline():
+    lm = LMCM(policy="immediate", retry_backoff_s=4.0, retry_jitter=0.0)
+    req = MigrationRequest("j", 0.0, 1e9)
+    now = 0.0
+    for expect in (4.0, 8.0, 16.0):
+        assert lm.fail(req, _aborted(), now)
+        assert req.scheduled_at - now == expect
+        now = req.scheduled_at
+
+
+def test_retry_jitter_scales_per_attempt():
+    lm = LMCM(policy="immediate", retry_backoff_s=4.0, retry_jitter=0.5,
+              retry_jitter_seed=0, retry_max=3)
+    req = MigrationRequest("j", 0.0, 1e9)
+    now = 0.0
+    for k in range(3):
+        assert lm.fail(req, _aborted(), now)
+        base = 4.0 * 2.0 ** k
+        assert base <= req.scheduled_at - now <= base * 1.5
+        now = req.scheduled_at
+
+
+def test_telemetry_blackout_builder_seeded_subset():
+    jobs = [f"j{i}" for i in range(10)]
+    p1 = FaultPlan.telemetry_blackout(50.0, jobs, duration_s=30.0,
+                                      frac=0.4, seed=5)
+    p2 = FaultPlan.telemetry_blackout(50.0, jobs, duration_s=30.0,
+                                      frac=0.4, seed=5)
+    assert [e.jobs for e in p1] == [e.jobs for e in p2]
+    assert len(p1.events[0].jobs) == 4
+    assert p1.events[0].jobs == p1.events[1].jobs
+    assert p1.events[1].t == 80.0 and p1.events[1].kind \
+        == "telemetry_restore"
+    p3 = FaultPlan.telemetry_blackout(50.0, jobs, duration_s=30.0,
+                                      frac=0.4, seed=6)
+    assert p3.events[0].jobs != p1.events[0].jobs
+    # shifted() carries the job tuple through
+    s = p1.shifted(100.0)
+    assert s.events[0].jobs == p1.events[0].jobs
+    assert s.events[0].t == 150.0

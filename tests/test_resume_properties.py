@@ -1,0 +1,168 @@
+"""Property tests: ``strunk.ResumeState`` under time-varying (and
+guard-throttled) rate tables.
+
+The resumable pre-copy recurrence must stay exact when the dirty-rate
+table is NOT constant — including tables the prediction guard has
+rescaled mid-flight (``guard.throttled_spec``):
+
+* fresh-init bit-parity: ``init=ResumeState.fresh(v)`` equals the
+  no-init hot loop bit-for-bit on every outcome field, for randomized
+  multi-segment tables at randomized throttle factors;
+* conservation: snapshot a lane mid-round off the executing plane
+  (``lane_state``) — including AFTER an auto-converge throttle swapped
+  its table — and the marginal repriced bill plus bytes/time already
+  charged equals the plane's realized outcome.
+
+Hypothesis drives the randomized forms when installed
+(``_hypothesis_compat``); the seeded loops below always run, so the
+properties are exercised in clean containers too.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+from repro.core import network, strunk
+from repro.core.guard import MigrationGuard, throttled_spec
+from repro.core.orchestrator import MigrationRequest
+from repro.core.plane import MigrationPlane
+from repro.core.rates import PiecewiseRate
+
+CAP = 125e6
+
+
+def _rand_table(rng) -> PiecewiseRate:
+    n = int(rng.integers(2, 6))
+    ends = np.cumsum(rng.uniform(5.0, 60.0, n))
+    rates = rng.uniform(0.0, 2.5e8, n)
+    return PiecewiseRate(ends, rates, offset=float(rng.uniform(0.0, 30.0)))
+
+
+def _assert_fresh_parity(seed: int) -> None:
+    """Fresh-init == no-init, bit-for-bit, with every lane's table run
+    through the guard's throttle transform at a random factor (factor
+    1.0 rows keep the original table object)."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 10))
+    v = rng.uniform(1e8, 3e9, m)
+    bw = rng.uniform(5e6, 2e8, m)
+    t0 = rng.uniform(0.0, 400.0, m)
+    specs = []
+    for _ in range(m):
+        tbl = _rand_table(rng)
+        f = float(rng.choice([1.0, 0.5, 0.25, 0.1]))
+        specs.append(tbl if f == 1.0 else throttled_spec(tbl, f))
+    base = strunk.what_if_cost_batch(v, bw, specs, t0, full=True)
+    resumed = strunk.what_if_cost_batch(
+        v, bw, specs, t0, init=strunk.ResumeState.fresh(v), full=True)
+    for f in ("total_time", "downtime", "bytes_sent", "rounds",
+              "stop_reason"):
+        assert np.array_equal(getattr(base, f), getattr(resumed, f)), f
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_fresh_init_parity_throttled_tables_seeded(seed):
+    _assert_fresh_parity(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_fresh_init_parity_throttled_tables_property(seed):
+    _assert_fresh_parity(seed)
+
+
+def _snapshot_init(ls) -> strunk.ResumeState:
+    return strunk.ResumeState(
+        rem=np.asarray([ls.rem]), acc=np.asarray([ls.acc]),
+        sent=np.asarray([ls.sent]), rounds=np.asarray([ls.rounds]),
+        stopped=np.asarray([ls.stopped]), reason=np.asarray([ls.reason]))
+
+
+def _assert_conservation(seed: int, *, guard: bool) -> None:
+    """Step a lane on the plane, snapshot it mid-flight, run the rest
+    uninterrupted (one ``advance`` to the horizon — uninterrupted rounds
+    keep the plane on the reference recurrence), and check that the
+    snapshot's repriced marginal bill plus bytes/time already charged
+    equals the realized outcome. With ``guard`` the lane is hostile and
+    the throttle ladder swaps its table BEFORE the snapshot, so the
+    repriced spec is the THROTTLED PiecewiseRate."""
+    rng = np.random.default_rng(seed)
+    if guard:
+        g = MigrationGuard(throttle_ratio=1.1, abort_ratio=100.0,
+                           throttle_factor=0.3, throttle_floor=0.3)
+        rate = PiecewiseRate([1e9], [float(rng.uniform(2e8, 4e8))])
+        v = float(rng.uniform(1e9, 2e9))
+    else:
+        g, rate, v = None, _rand_table(rng), float(rng.uniform(5e8, 3e9))
+    plane = MigrationPlane(network.Topology.single_link(CAP), guard=g)
+    req = MigrationRequest("j", 0.0, v, src="h0", dst="h1")
+    if guard:
+        req.expected_bytes, req.expected_time = 1.02 * v, 1.02 * v / CAP
+    plane.launch(req, rate, 0.0)
+    t, done = 0.0, []
+    wait = float(rng.uniform(2.0, 20.0))
+    while plane.in_flight and (t < wait or
+                               (guard and g.n_throttles == 0)) \
+            and t < 200.0:
+        t += 1.0
+        done.extend(plane.advance(t))
+    if not plane.in_flight:
+        return                       # lane finished before the snapshot
+    ls = plane.lane_state()[0]
+    if ls.stopped:
+        return                       # already in stop-and-copy: no resume
+    done.extend(plane.advance(900.0))
+    assert len(done) == 1
+    out = done[0][1]
+    if guard:
+        assert g.n_throttles >= 1
+        assert isinstance(ls.spec, PiecewiseRate)
+        assert float(np.asarray(ls.spec.rates)[0]) < \
+            float(np.asarray(rate.rates)[0])
+    marg = strunk.what_if_cost_batch(
+        [ls.v], [CAP], [ls.spec], [t], init=_snapshot_init(ls),
+        full=True)
+    tight = lambda x: pytest.approx(x, rel=1e-12)
+    assert ls.sent + marg.bytes_sent[0] == tight(out.bytes_sent)
+    assert t + marg.total_time[0] == tight(out.total_time)
+    assert marg.downtime[0] == tight(out.downtime)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_resume_conservation_time_varying_seeded(seed):
+    _assert_conservation(seed, guard=False)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_resume_conservation_after_throttle_seeded(seed):
+    _assert_conservation(seed, guard=True)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_resume_conservation_time_varying_property(seed):
+    _assert_conservation(seed, guard=False)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=100_000))
+def test_resume_conservation_after_throttle_property(seed):
+    _assert_conservation(seed, guard=True)
+
+
+def test_resume_take_preserves_throttled_rows():
+    """``ResumeState.take`` gathers rows intact (the flattened-sweep
+    layout the controller reprices throttled in-flight lanes through)."""
+    st0 = strunk.ResumeState(
+        rem=np.asarray([1e8, 2e8]), acc=np.asarray([3e6, 4e6]),
+        sent=np.asarray([5e8, 6e8]), rounds=np.asarray([2, 3]),
+        stopped=np.asarray([False, True]),
+        reason=np.asarray([strunk.REASON_MAX_ROUNDS,
+                           strunk.REASON_DIRTY_LOW]))
+    g = st0.take([1, 0, 1])
+    assert np.array_equal(g.rem, [2e8, 1e8, 2e8])
+    assert np.array_equal(g.stopped, [True, False, True])
+    assert np.array_equal(g.reason, [strunk.REASON_DIRTY_LOW,
+                                     strunk.REASON_MAX_ROUNDS,
+                                     strunk.REASON_DIRTY_LOW])
